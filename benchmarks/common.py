@@ -1,0 +1,59 @@
+"""Shared helpers for the benchmark suite (CSV conventions: one line per
+measurement, ``name,us_per_call,derived``)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.data.tpch import TpchConfig, generate, generate_customer, \
+    plant_keywords, prejoin_orders_customer
+from repro.data.schema import JoinEdge, StarSchema
+
+
+def timed(fn, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def make_dataset(scale: float = 1.0, skew: float = 0.0, seed: int = 5,
+                 query_type: str = "star"):
+    """TPC-H-like dataset + planted keyword query, per paper Fig. 5 types.
+
+    star  — keywords on PART / SUPPLIER / ORDERS           (Q1-Q3)
+    chain — CUSTOMER ⋈ ORDERS pre-joined, keywords on the merged relation
+            and SUPPLIER                                    (Q4-Q6)
+    mix   — keywords on PART and merged ORDERS_CUSTOMER     (Q7-Q9)
+    """
+    cfg = TpchConfig(scale=scale, fact_rows=6000, part_rows=400,
+                     supp_rows=200, order_rows=500, text_len=8,
+                     vocab_size=2048, seed=seed, skew=skew)
+    schema = generate(cfg)
+    kws = [2000, 2001, 2002]
+    if query_type == "star":
+        # selectivity ~8% per keyword: paper-like tuple-set sizes
+        schema = plant_keywords(schema, {"PART": [2000], "SUPPLIER": [2001],
+                                         "ORDERS": [2002]}, frac=0.08)
+        return schema, kws
+    customer = generate_customer(cfg)
+    rng = np.random.default_rng(seed + 2)
+    cust_of_order = rng.integers(0, customer.rows, schema.dims[2].rows)
+    merged = prejoin_orders_customer(schema.dims[2], customer, cust_of_order)
+    dims = [schema.dims[0], schema.dims[1], merged]
+    edges = list(schema.edges[:2]) + [
+        JoinEdge("ORDERS_CUSTOMER", "orderkey", "orderkey")]
+    schema = StarSchema(fact=schema.fact, dims=dims, edges=edges,
+                        vocab_size=schema.vocab_size)
+    if query_type == "chain":
+        plant = {"ORDERS_CUSTOMER": [2000, 2001], "SUPPLIER": [2002]}
+    else:  # mix
+        plant = {"PART": [2000], "ORDERS_CUSTOMER": [2001, 2002]}
+    return plant_keywords(schema, plant, frac=0.08), kws

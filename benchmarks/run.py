@@ -1,0 +1,30 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (see DESIGN.md §7 for the
+paper-artifact ↔ benchmark mapping).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (kernel_micro, response_time, shares_comm,
+                            shuffle_size, skew_adjust)
+    mods = {
+        "response_time": response_time,
+        "shuffle_size": shuffle_size,
+        "skew_adjust": skew_adjust,
+        "shares_comm": shares_comm,
+        "kernel_micro": kernel_micro,
+    }
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in mods.items():
+        if only and only != name:
+            continue
+        mod.run()
+
+
+if __name__ == "__main__":
+    main()

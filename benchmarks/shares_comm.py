@@ -1,0 +1,68 @@
+"""Paper §2.2/§4.1 analogue: communication cost of the Lagrangean shares vs
+uniform and degenerate share allocations, at k = 8 / 64 / 256 reduce tasks.
+
+Costs are exact plan-measured shuffle rows (Corollary-2 dedup included) on
+the same dataset/query; ``derived`` reports the ratio to the optimizer's
+choice — the paper's 3·∛(krst) optimum shows up as ratio 1.0.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from benchmarks.common import emit, make_dataset
+from repro.core.candidate_network import TupleSets, enumerate_star_cns, prune_empty_cns
+from repro.core.plan import build_cn_plan
+from repro.core.shares import optimize_shares
+
+
+def _biggest_cn(schema, kws):
+    ts = TupleSets.build(schema, kws)
+    cns = prune_empty_cns(enumerate_star_cns(len(kws), schema.m, 4), ts)
+    best, size = None, -1
+    for cn in cns:
+        fact_idx, dim_idx = ts.cn_rows(cn)
+        if fact_idx is None or len(dim_idx) < schema.m:
+            continue
+        if len(fact_idx) > size:
+            best, size = cn, len(fact_idx)
+    return ts, best
+
+
+def _factorizations(k, m):
+    if m == 1:
+        return [(k,)]
+    out = []
+    for d in range(1, k + 1):
+        if k % d == 0:
+            for rest in _factorizations(k // d, m - 1):
+                out.append((d,) + rest)
+    return out
+
+
+def run():
+    schema, kws = make_dataset(scale=1.0)
+    ts, cn = _biggest_cn(schema, kws)
+    for k in (8, 64, 256):
+        plans = {}
+        opt = None
+        for shares in _factorizations(k, schema.m):
+            plan = build_cn_plan(schema, ts, cn, k, mode="uniform",
+                                 shares=shares)
+            plans[shares] = plan.shuffle_rows
+        sizes = [len(ts.cn_rows(cn)[1][i]) for i in sorted(ts.cn_rows(cn)[1])]
+        opt_shares = optimize_shares(sizes, k,
+                                     fact_size=len(ts.cn_rows(cn)[0])).shares
+        opt_rows = plans[opt_shares]
+        worst = max(plans.values())
+        uniform = plans.get(tuple(int(round(k ** (1 / 3)))
+                                  for _ in range(3)), None)
+        emit(f"shares/k{k}/optimized", float(opt_rows), "ratio=1.00")
+        if uniform is not None:
+            emit(f"shares/k{k}/uniform_cuberoot", float(uniform),
+                 f"ratio={uniform / opt_rows:.2f}")
+        emit(f"shares/k{k}/worst_factorization", float(worst),
+             f"ratio={worst / opt_rows:.2f}")
+        assert opt_rows == min(plans.values()), (
+            "optimizer not optimal", k, opt_shares)

@@ -1,0 +1,48 @@
+"""Paper Fig. 9-11 analogue: reduce-shuffle volume vs dataset size and query
+type, as a fraction of dataset size (paper: star ≈ 20 %, chain ≈ 10 %,
+mix ≈ 17 %).  Bytes come from the routing plan (exact, Corollary-2 dedup
+applied) — the same quantity the Lagrangean shares minimize.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_dataset
+from repro.core.fct import run_fct_query
+
+
+def dataset_bytes(schema) -> int:
+    total = schema.fact.text.nbytes + sum(k.nbytes
+                                          for k in schema.fact.keys.values())
+    for d in schema.dims:
+        total += d.text.nbytes + sum(k.nbytes for k in d.keys.values())
+    return total
+
+
+def _dominant_plan(schema, kws):
+    from repro.core.candidate_network import (TupleSets, enumerate_star_cns,
+                                              prune_empty_cns)
+    from repro.core.plan import build_cn_plan
+    ts = TupleSets.build(schema, kws)
+    cns = prune_empty_cns(enumerate_star_cns(len(kws), schema.m, 4), ts)
+    best, sz = None, -1
+    for cn in cns:
+        fact_idx, dim_idx = ts.cn_rows(cn)
+        if fact_idx is None or not dim_idx:
+            continue
+        if len(fact_idx) > sz:
+            best, sz = cn, len(fact_idx)
+    return build_cn_plan(schema, ts, best, 1)
+
+
+def run():
+    for qtype in ("star", "chain", "mix"):
+        for scale in (1.0, 2.0, 4.0):
+            schema, kws = make_dataset(scale=scale, query_type=qtype)
+            res = run_fct_query(schema, kws, r_max=4)
+            total = res.shuffle_bytes / dataset_bytes(schema)
+            # the paper measures one MR job; compare its dominant-CN analogue
+            dom = _dominant_plan(schema, kws)
+            frac = dom.shuffle_bytes / dataset_bytes(schema)
+            emit(f"fct_shuffle/{qtype}/scale{scale}",
+                 float(res.shuffle_bytes),
+                 f"dominant_cn_fraction={frac:.3f} "
+                 f"all_{res.n_joined_cns}_cns_fraction={total:.3f}")

@@ -1,0 +1,56 @@
+"""Batched serving demo: prefill a batch of prompts token-by-token into the
+KV/state cache, then decode continuations greedily — the same ``serve_step``
+the decode_32k/long_500k dry-run cells lower at production shapes.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch recurrentgemma-2b]
+(arch is reduced to its smoke variant so it runs on CPU).
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_arch
+from repro.models import model as M
+from repro.train.step import make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen-len", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    assert cfg.has_decode(), "encoder-only archs cannot decode"
+    assert cfg.frontend != "patch" or True
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    total = args.prompt_len + args.gen_len
+    cache = M.init_cache(cfg, args.batch, total)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    step = jax.jit(make_serve_step(cfg))
+
+    # prefill: feed prompt tokens through the decode path (fills the cache)
+    tok = None
+    for t in range(args.prompt_len):
+        tok, cache = step(params, cache, prompts[:, t:t + 1], t)
+    # decode: greedy continuation, batched
+    generated = [tok]
+    for t in range(args.prompt_len, total - 1):
+        tok, cache = step(params, cache, tok[:, None], t)
+        generated.append(tok)
+    gen = jnp.stack(generated, axis=1)
+    print(f"arch={cfg.name} batch={args.batch} "
+          f"prompt={args.prompt_len} generated={gen.shape[1]} tokens")
+    for i in range(args.batch):
+        print(f"  req{i}: prompt={list(map(int, prompts[i]))[:6]}... "
+              f"-> {list(map(int, gen[i]))[:10]}...")
+    print("serve ok: cache-backed batched decode ran end to end")
+
+
+if __name__ == "__main__":
+    main()

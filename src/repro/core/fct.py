@@ -1,0 +1,285 @@
+"""The two MapReduce jobs as one fused shard_map program (paper §4.3–§4.4).
+
+MR¹ (statistics): route tuple-set rows per the static plan (gather →
+``all_to_all`` → mask), build dense ``num``-arrays per dimension, probe them
+per fact row to produce fact volumes and per-dimension ``vol`` contributions.
+
+MR² (term frequency): weighted token histogram of every routed payload with
+its volume (Pallas ``fct_count`` on TPU, segment-sum ref elsewhere), then one
+``psum`` over the worker axis — the "aggregation equal transformation" of
+Theorem 1 — and a host-side top-k with the Def. 6 exclusions.
+
+The two jobs are separable (``job1`` returns the vol-array artifact that
+``job2`` consumes) so the MR¹→MR² boundary can be checkpointed, but the fused
+path is the default: on a TPU there is no reason to spill the intermediate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.candidate_network import TupleSets, enumerate_star_cns, prune_empty_cns
+from repro.core.plan import CNPlan, build_cn_plan
+from repro.core.star import topk_terms
+from repro.data.schema import PAD_ID, StarSchema, tokens_histogram
+from repro.kernels.fct_count.ops import weighted_histogram
+
+
+# ---------------------------------------------------------------------------
+# device-side program
+# ---------------------------------------------------------------------------
+
+def _route(text, keys, send):
+    """Gather rows into per-destination buffers and all_to_all them.
+
+    text [S, L]; keys [S] or [S, m]; send [P, C] (local row idx, -1 pad).
+    Returns (text [P*C, L], keys [P*C(, m)], mask [P*C]) of received rows.
+    """
+    idx = jnp.maximum(send, 0)
+    mask = send >= 0
+    btext = jnp.take(text, idx.reshape(-1), axis=0)
+    btext = btext.reshape(send.shape + text.shape[1:])
+    bkeys = jnp.take(keys, idx.reshape(-1), axis=0)
+    bkeys = bkeys.reshape(send.shape + keys.shape[1:])
+    rtext = lax.all_to_all(btext, "w", split_axis=0, concat_axis=0, tiled=True)
+    rkeys = lax.all_to_all(bkeys, "w", split_axis=0, concat_axis=0, tiled=True)
+    rmask = lax.all_to_all(mask, "w", split_axis=0, concat_axis=0, tiled=True)
+    flat = rtext.shape[0] * rtext.shape[1]
+    return (rtext.reshape((flat,) + rtext.shape[2:]),
+            rkeys.reshape((flat,) + rkeys.shape[2:]),
+            rmask.reshape(flat))
+
+
+def _device_fct(fact, dims, *, domains: Tuple[int, ...], vocab: int,
+                histogram_backend: str):
+    """One worker's MR¹+MR² for one CN.  All inputs are this device's shard."""
+    ftext, fkeys, fmask = _route(fact["text"], fact["keys"], fact["send"])
+    routed_dims = [
+        _route(d["text"], d["keys"], d["send"]) for d in dims
+    ]
+    m = len(dims)
+
+    # --- MR1: num-arrays (combine + reduce-side counting) ---
+    nums = []
+    for (dtext, dkeys, dmask), dom in zip(routed_dims, domains):
+        num = jnp.zeros((dom,), jnp.int32).at[dkeys].add(
+            dmask.astype(jnp.int32), mode="drop")
+        nums.append(num)
+
+    # --- MR1: volumes (Algorithm 3 stage 2) ---
+    probes = [nums[i][fkeys[:, i]] for i in range(m)]
+    fvalid = fmask.astype(jnp.int32)
+    vol_fact = fvalid
+    for pr in probes:
+        vol_fact = vol_fact * pr
+    dim_vols = []
+    for i in range(m):
+        others = fvalid
+        for j in range(m):
+            if j != i:
+                others = others * probes[j]
+        contrib = jnp.zeros((domains[i],), jnp.int32).at[fkeys[:, i]].add(
+            others, mode="drop")
+        (dtext, dkeys, dmask) = routed_dims[i]
+        dim_vols.append(contrib[dkeys] * dmask.astype(jnp.int32))
+
+    # --- MR2: weighted histograms + global aggregation ---
+    hist = weighted_histogram(ftext, vol_fact, vocab,
+                              backend=histogram_backend)
+    for (dtext, dkeys, dmask), w in zip(routed_dims, dim_vols):
+        hist = hist + weighted_histogram(dtext, w.astype(hist.dtype), vocab,
+                                         backend=histogram_backend)
+    return lax.psum(hist, "w")
+
+
+def _plan_to_arrays(plan: CNPlan):
+    fact = {"text": jnp.asarray(plan.fact.text),
+            "keys": jnp.asarray(plan.fact.keys),
+            "send": jnp.asarray(plan.fact.send)}
+    dims = [{"text": jnp.asarray(plan.dims[i].text),
+             "keys": jnp.asarray(plan.dims[i].keys),
+             "send": jnp.asarray(plan.dims[i].send)}
+            for i in plan.included]
+    return fact, dims
+
+
+def make_fct_program(plan: CNPlan, mesh: Mesh, histogram_backend: str = "auto"):
+    """shard_map'ed (fact, dims) -> freq[vocab], plus its input arrays."""
+    fact, dims = _plan_to_arrays(plan)
+    domains = tuple(plan.key_domains[i] for i in plan.included)
+    shard = P("w")
+    specs_rel = {"text": shard, "keys": shard, "send": shard}
+    fn = shard_map(
+        lambda f, ds: _device_fct(
+            {k: jnp.squeeze(v, 0) for k, v in f.items()},
+            [{k: jnp.squeeze(v, 0) for k, v in d.items()} for d in ds],
+            domains=domains, vocab=plan.vocab_size,
+            histogram_backend=histogram_backend),
+        mesh=mesh,
+        in_specs=(specs_rel, [specs_rel] * len(dims)),
+        out_specs=P(),
+        check_rep=False,
+    )
+    return fn, (fact, dims)
+
+
+def run_cn_plan(plan: CNPlan, mesh: Mesh,
+                histogram_backend: str = "auto") -> np.ndarray:
+    fn, args = make_fct_program(plan, mesh, histogram_backend)
+    freq = jax.jit(fn)(*args)
+    return np.asarray(freq, np.int64)
+
+
+# ---------------------------------------------------------------------------
+# split two-job execution (the paper's MR1 / MR2 boundary, checkpointable)
+# ---------------------------------------------------------------------------
+
+def _device_job1(fact, dims, *, domains):
+    """MR1 only: route + num-arrays + volumes.  Returns the vol-arrays
+    artifact {text, vol} per relation — the paper's reducer output that
+    MapReduce2nd consumes (and the natural checkpoint boundary)."""
+    ftext, fkeys, fmask = _route(fact["text"], fact["keys"], fact["send"])
+    routed_dims = [_route(d["text"], d["keys"], d["send"]) for d in dims]
+    m = len(dims)
+    nums = []
+    for (dtext, dkeys, dmask), dom in zip(routed_dims, domains):
+        nums.append(jnp.zeros((dom,), jnp.int32).at[dkeys].add(
+            dmask.astype(jnp.int32), mode="drop"))
+    probes = [nums[i][fkeys[:, i]] for i in range(m)]
+    fvalid = fmask.astype(jnp.int32)
+    vol_fact = fvalid
+    for pr in probes:
+        vol_fact = vol_fact * pr
+    out = {"fact": {"text": ftext, "vol": vol_fact}, "dims": []}
+    for i in range(m):
+        others = fvalid
+        for j in range(m):
+            if j != i:
+                others = others * probes[j]
+        contrib = jnp.zeros((domains[i],), jnp.int32).at[fkeys[:, i]].add(
+            others, mode="drop")
+        (dtext, dkeys, dmask) = routed_dims[i]
+        out["dims"].append({"text": dtext,
+                            "vol": contrib[dkeys] * dmask.astype(jnp.int32)})
+    return out
+
+
+def _device_job2(vol_arrays, *, vocab, histogram_backend):
+    """MR2 only: weighted word-count over the vol-arrays + global psum."""
+    hist = weighted_histogram(vol_arrays["fact"]["text"],
+                              vol_arrays["fact"]["vol"], vocab,
+                              backend=histogram_backend)
+    for d in vol_arrays["dims"]:
+        hist = hist + weighted_histogram(d["text"],
+                                         d["vol"].astype(hist.dtype), vocab,
+                                         backend=histogram_backend)
+    return lax.psum(hist, "w")
+
+
+def run_cn_plan_two_jobs(plan: CNPlan, mesh: Mesh,
+                         histogram_backend: str = "auto",
+                         checkpoint_dir: Optional[str] = None) -> np.ndarray:
+    """MR1 -> (optional host checkpoint) -> MR2, matching the fused path."""
+    fact, dims = _plan_to_arrays(plan)
+    domains = tuple(plan.key_domains[i] for i in plan.included)
+    shard = P("w")
+    specs_rel = {"text": shard, "keys": shard, "send": shard}
+    vol_spec = {"fact": {"text": shard, "vol": shard},
+                "dims": [{"text": shard, "vol": shard}] * len(dims)}
+    job1 = shard_map(
+        lambda f, ds: _device_job1(
+            {k: jnp.squeeze(v, 0) for k, v in f.items()},
+            [{k: jnp.squeeze(v, 0) for k, v in d.items()} for d in ds],
+            domains=domains),
+        mesh=mesh, in_specs=(specs_rel, [specs_rel] * len(dims)),
+        out_specs=vol_spec, check_rep=False)
+    vol_arrays = jax.jit(job1)(fact, dims)
+    if checkpoint_dir is not None:  # the MR boundary the paper spills to DFS
+        from repro.distributed.checkpoint import (restore_checkpoint,
+                                                  save_checkpoint)
+        save_checkpoint(checkpoint_dir, 1, vol_arrays)
+        _, vol_arrays = restore_checkpoint(checkpoint_dir, vol_arrays)
+    job2 = shard_map(
+        lambda va: _device_job2(va, vocab=plan.vocab_size,
+                                histogram_backend=histogram_backend),
+        mesh=mesh, in_specs=(vol_spec,), out_specs=P(), check_rep=False)
+    freq = jax.jit(job2)(vol_arrays)
+    return np.asarray(freq, np.int64)
+
+
+def lower_cn_plan(plan: CNPlan, mesh: Mesh, histogram_backend: str = "auto"):
+    """Lowered (uncompiled) program — benchmarks parse its HLO for bytes."""
+    fn, args = make_fct_program(plan, mesh, histogram_backend)
+    return jax.jit(fn).lower(*args)
+
+
+# ---------------------------------------------------------------------------
+# query runner
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FCTResult:
+    term_ids: np.ndarray
+    freqs: np.ndarray
+    all_freqs: np.ndarray
+    n_cns: int
+    n_joined_cns: int
+    shuffle_rows: int
+    shuffle_bytes: int
+    imbalance: float
+
+
+def run_fct_query(schema: StarSchema, keywords: Sequence[int], *,
+                  r_max: int = 4, k_terms: int = 10,
+                  mode: str = "uniform", rho: int = 4,
+                  sample_frac: float = 1.0, salt: int = 0,
+                  mesh: Optional[Mesh] = None,
+                  stop_mask: Optional[np.ndarray] = None,
+                  histogram_backend: str = "auto") -> FCTResult:
+    """End-to-end FCT query (Def. 6) over the device mesh."""
+    if mesh is None:
+        devs = np.array(jax.devices())
+        mesh = Mesh(devs, ("w",))
+    n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+
+    ts = TupleSets.build(schema, keywords)
+    cns = prune_empty_cns(enumerate_star_cns(len(keywords), schema.m, r_max), ts)
+    freq = np.zeros((schema.vocab_size,), np.int64)
+    n_joined = 0
+    shuffle_rows = shuffle_bytes = 0
+    imbalance, dominant_cost = 1.0, -1.0
+    for cn in cns:
+        plan = build_cn_plan(schema, ts, cn, n_dev, mode=mode, rho=rho,
+                             sample_frac=sample_frac, salt=salt)
+        if plan is None:
+            # single-relation CN: a map-only word-count (no shuffle needed)
+            fact_idx, dim_idx = ts.cn_rows(cn)
+            if fact_idx is not None:
+                text = schema.fact.text[fact_idx]
+            else:
+                (i, rows), = dim_idx.items()
+                text = schema.dims[i].text[rows]
+            freq += tokens_histogram(
+                text, np.ones(text.shape[0], np.int64), schema.vocab_size)
+            continue
+        n_joined += 1
+        shuffle_rows += plan.shuffle_rows
+        shuffle_bytes += plan.shuffle_bytes
+        # report balance of the dominant (most expensive) CN, not of tiny ones
+        total = float(plan.schedule.device_cost.sum())
+        if total > dominant_cost:
+            dominant_cost, imbalance = total, plan.schedule.imbalance
+        freq += run_cn_plan(plan, mesh, histogram_backend)
+    freq[PAD_ID] = 0
+    ids, f = topk_terms(freq, keywords, k_terms, stop_mask)
+    return FCTResult(term_ids=ids, freqs=f, all_freqs=freq,
+                     n_cns=len(cns), n_joined_cns=n_joined,
+                     shuffle_rows=shuffle_rows, shuffle_bytes=shuffle_bytes,
+                     imbalance=imbalance)

@@ -1,0 +1,202 @@
+"""Host-side FCT planner: query -> CNs -> shares -> static routing plan.
+
+This is the paper's "master node" work: ``getPartition()`` (Algorithm 2), the
+allocation table of §4.2, and the §4.3.3 task pruning — all computed once per
+query on the host as dense index tables.  Devices execute the plan with
+static shapes only (gather -> all_to_all -> compute); they never hash keys or
+make routing decisions.
+
+Replication accounting: a dimension row needed by several tasks on the SAME
+device is sent once (paper Corollary 2, "data filtering"), so the measured
+shuffle bytes equal  Σ_i |D_i| · (unique destination devices per row)  which
+the shares optimizer minimizes with its  Σ_i d_i·k/a_i  model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.candidate_network import StarCN, TupleSets
+from repro.core.hypercube import TaskGrid, over_decompose
+from repro.core.shares import optimize_shares
+from repro.core.skew import (Schedule, estimate_task_costs, lpt_schedule,
+                             round_robin_schedule)
+from repro.data.schema import PAD_ID, StarSchema
+
+
+@dataclasses.dataclass
+class RelationRoute:
+    """Sharded relation + static send table for one relation of one CN."""
+
+    text: np.ndarray     # int32 [P, S, L]   row-sharded input (padded)
+    keys: np.ndarray     # int32 [P, S] (dim) or [P, S, m_inc] (fact)
+    send: np.ndarray     # int32 [P, P, C]   local row idx to send, -1 pad
+    sent_rows: int       # total routed rows (shuffle volume, rows)
+
+    @property
+    def capacity(self) -> int:
+        return int(self.send.shape[-1])
+
+
+@dataclasses.dataclass
+class CNPlan:
+    cn: StarCN
+    included: Tuple[int, ...]
+    shares: Tuple[int, ...]
+    schedule: Schedule
+    fact: RelationRoute
+    dims: Dict[int, RelationRoute]
+    key_domains: Dict[int, int]
+    vocab_size: int
+    shuffle_rows: int           # fact + replicated dim rows actually sent
+    shuffle_bytes: int          # int32 payload bytes (keys + text)
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.fact.text.shape[0])
+
+
+def _shard_rows(arr: np.ndarray, P: int, pad_value: int) -> np.ndarray:
+    rows = arr.shape[0]
+    S = max(1, math.ceil(rows / P))
+    pad = P * S - rows
+    if pad:
+        pad_block = np.full((pad,) + arr.shape[1:], pad_value, arr.dtype)
+        arr = np.concatenate([arr, pad_block], axis=0)
+    return arr.reshape((P, S) + arr.shape[1:])
+
+
+def _send_table(pairs_src: np.ndarray, pairs_dst: np.ndarray,
+                pairs_local: np.ndarray, P: int) -> Tuple[np.ndarray, int]:
+    """Build [P, P, C] send table from (src, dst, local_idx) triples."""
+    counts = np.zeros((P, P), np.int64)
+    np.add.at(counts, (pairs_src, pairs_dst), 1)
+    C = max(1, int(counts.max()))
+    table = np.full((P, P, C), -1, np.int32)
+    order = np.lexsort((pairs_local, pairs_dst, pairs_src))
+    s, d, l = pairs_src[order], pairs_dst[order], pairs_local[order]
+    # position within each (src, dst) group
+    group = s.astype(np.int64) * P + d
+    start = np.searchsorted(group, group, side="left")
+    pos = np.arange(len(group)) - start
+    table[s, d, pos] = l
+    return table, int(len(pairs_src))
+
+
+def build_cn_plan(schema: StarSchema, ts: TupleSets, cn: StarCN,
+                  n_devices: int, mode: str = "uniform", rho: int = 4,
+                  sample_frac: float = 1.0, salt: int = 0,
+                  shares: Optional[Tuple[int, ...]] = None) -> Optional[CNPlan]:
+    """Routing plan for a joined star CN.  Returns None for 1-relation CNs."""
+    P = n_devices
+    fact_idx, dim_idx = ts.cn_rows(cn)
+    if fact_idx is None or len(dim_idx) == 0:
+        return None
+    inc = tuple(sorted(dim_idx))
+    m = len(inc)
+
+    # --- shares (§4.1): optimizer over the CN's tuple-set sizes ---
+    if shares is None:
+        sizes = [max(1, len(dim_idx[i])) for i in inc]
+        shares = optimize_shares(sizes, P, fact_size=len(fact_idx)).shares
+    grid_shares = shares if mode == "uniform" else over_decompose(shares, rho)
+    grid = TaskGrid(grid_shares)
+    T = grid.n_tasks
+
+    # --- per-row task/bucket assignment (host 'getPartition()') ---
+    fact_key_cols = [schema.fact_keys(i)[fact_idx] for i in inc]
+    fact_tasks = grid.fact_tasks(fact_key_cols, salt)
+    dim_buckets = {i: grid.dim_buckets(p, schema.dim_keys(i)[dim_idx[i]], salt)
+                   for p, i in enumerate(inc)}
+
+    # --- schedule tasks onto devices (§4.2-4.3) ---
+    empty = np.bincount(fact_tasks, minlength=T) == 0
+    if mode == "uniform":
+        assert T == P, (T, P, "uniform mode requires shares product == P")
+        schedule = Schedule(task_to_device=np.arange(T, dtype=np.int32),
+                            device_cost=np.bincount(fact_tasks, minlength=T)
+                            .astype(np.float64),
+                            task_cost=np.bincount(fact_tasks, minlength=T)
+                            .astype(np.float64))
+    else:
+        nums = []
+        probes = []
+        for p, i in enumerate(inc):
+            dom = schema.key_domain(i)
+            keys = schema.dim_keys(i)[dim_idx[i]]
+            num = np.bincount(keys, minlength=dom)
+            nums.append(num)
+            probes.append(num[fact_key_cols[p]].astype(np.float64))
+        cost = estimate_task_costs(grid, fact_tasks, probes,
+                                   [dim_buckets[i] for i in inc],
+                                   sample_frac=sample_frac, seed=salt)
+        if mode == "skew":
+            schedule = lpt_schedule(cost, P, prune_empty=empty)
+        elif mode == "round_robin":
+            schedule = round_robin_schedule(cost, P)
+        else:
+            raise ValueError(mode)
+
+    t2d = schedule.task_to_device
+
+    # --- fact routing: each row to exactly one device ---
+    fact_dst = t2d[fact_tasks]
+    keep = fact_dst >= 0
+    fkeys = np.stack(fact_key_cols, axis=1).astype(np.int32)
+    ftext = schema.fact.text[fact_idx]
+    # compact: planner only ships tuple-set rows (map-side keyword filter)
+    ftext_sh = _shard_rows(ftext, P, PAD_ID)
+    fkeys_sh = _shard_rows(fkeys, P, 0)
+    S_f = ftext_sh.shape[1]
+    rows = np.arange(len(fact_idx))
+    src = (rows // S_f).astype(np.int32)
+    local = (rows % S_f).astype(np.int32)
+    table, sent_f = _send_table(src[keep], fact_dst[keep].astype(np.int32),
+                                local[keep], P)
+    fact_route = RelationRoute(text=ftext_sh.astype(np.int32),
+                               keys=fkeys_sh, send=table, sent_rows=sent_f)
+
+    # --- dim routing: each row to every device owning a matching task ---
+    dims: Dict[int, RelationRoute] = {}
+    shuffle_rows = sent_f
+    shuffle_bytes = sent_f * 4 * (ftext.shape[1] + m)
+    for p, i in enumerate(inc):
+        rows_i = dim_idx[i]
+        dkeys = schema.dim_keys(i)[rows_i].astype(np.int32)
+        dtext = schema.dims[i].text[rows_i]
+        dtext_sh = _shard_rows(dtext, P, PAD_ID)
+        dkeys_sh = _shard_rows(dkeys[:, None], P, 0)[..., 0]
+        S_d = dtext_sh.shape[1]
+        r = np.arange(len(rows_i))
+        src_d = (r // S_d).astype(np.int32)
+        local_d = (r % S_d).astype(np.int32)
+        pair_src, pair_dst, pair_loc = [], [], []
+        for b in range(grid.shares[p]):
+            owners = t2d[grid.tasks_with_coord(p, b)]
+            owners = np.unique(owners[owners >= 0])  # Cor. 2: dedup per device
+            sel = dim_buckets[i] == b
+            if owners.size == 0 or not sel.any():
+                continue
+            rs, ls = src_d[sel], local_d[sel]
+            pair_src.append(np.repeat(rs, owners.size))
+            pair_loc.append(np.repeat(ls, owners.size))
+            pair_dst.append(np.tile(owners.astype(np.int32), rs.size))
+        if pair_src:
+            table_d, sent_d = _send_table(np.concatenate(pair_src),
+                                          np.concatenate(pair_dst),
+                                          np.concatenate(pair_loc), P)
+        else:
+            table_d, sent_d = np.full((P, P, 1), -1, np.int32), 0
+        dims[i] = RelationRoute(text=dtext_sh.astype(np.int32),
+                                keys=dkeys_sh, send=table_d, sent_rows=sent_d)
+        shuffle_rows += sent_d
+        shuffle_bytes += sent_d * 4 * (dtext.shape[1] + 1)
+
+    return CNPlan(cn=cn, included=inc, shares=grid_shares, schedule=schedule,
+                  fact=fact_route, dims=dims,
+                  key_domains={i: schema.key_domain(i) for i in inc},
+                  vocab_size=schema.vocab_size,
+                  shuffle_rows=shuffle_rows, shuffle_bytes=shuffle_bytes)

@@ -1,0 +1,128 @@
+"""Relational substrate with dense, static-shape storage.
+
+Hadoop streams variadic records; a TPU wants static shapes.  A Relation is
+stored as
+  * one int32 key column per join attribute (dense key ids in [0, domain)),
+  * an int32 token matrix ``text[rows, text_len]`` (PAD_ID padded) holding the
+    tokenized concatenation of all non-key attributes.
+
+A Schema describes a star (or snowflake, after pre-joining) layout: one fact
+relation joined to ``m`` dimension relations through (fact_col -> dim_col)
+foreign keys.  This mirrors the paper's experimental setup (LINEITEM fact;
+PART / SUPPLIER / ORDERS dimensions).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+PAD_ID = 0  # token id reserved for padding; never counted as a term
+
+
+@dataclasses.dataclass
+class Relation:
+    """A relation with dense int key columns and a fixed-width token matrix."""
+
+    name: str
+    keys: Mapping[str, np.ndarray]        # col -> int32 [rows]
+    key_domains: Mapping[str, int]        # col -> domain size (keys < domain)
+    text: np.ndarray                      # int32 [rows, text_len]
+
+    def __post_init__(self) -> None:
+        rows = self.text.shape[0]
+        for col, arr in self.keys.items():
+            assert arr.shape == (rows,), (self.name, col, arr.shape, rows)
+            assert arr.dtype == np.int32
+        assert self.text.dtype == np.int32
+
+    @property
+    def rows(self) -> int:
+        return int(self.text.shape[0])
+
+    @property
+    def text_len(self) -> int:
+        return int(self.text.shape[1])
+
+    def take(self, idx: np.ndarray) -> "Relation":
+        return Relation(
+            name=self.name,
+            keys={c: np.asarray(a[idx], np.int32) for c, a in self.keys.items()},
+            key_domains=dict(self.key_domains),
+            text=np.asarray(self.text[idx], np.int32),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinEdge:
+    """fact.fact_col references dim.dim_col (FK -> PK in the schema graph)."""
+
+    dim_name: str
+    fact_col: str
+    dim_col: str
+
+
+@dataclasses.dataclass
+class StarSchema:
+    """One fact relation + m dimensions; the paper's star candidate network."""
+
+    fact: Relation
+    dims: Sequence[Relation]
+    edges: Sequence[JoinEdge]  # edges[i] joins fact to dims[i]
+    vocab_size: int
+
+    def __post_init__(self) -> None:
+        assert len(self.dims) == len(self.edges)
+        for dim, edge in zip(self.dims, self.edges):
+            assert dim.name == edge.dim_name
+            d_fact = self.fact.key_domains[edge.fact_col]
+            d_dim = dim.key_domains[edge.dim_col]
+            assert d_fact == d_dim, (edge, d_fact, d_dim)
+
+    @property
+    def m(self) -> int:
+        return len(self.dims)
+
+    def key_domain(self, i: int) -> int:
+        return self.fact.key_domains[self.edges[i].fact_col]
+
+    def fact_keys(self, i: int) -> np.ndarray:
+        return self.fact.keys[self.edges[i].fact_col]
+
+    def dim_keys(self, i: int) -> np.ndarray:
+        return self.dims[i].keys[self.edges[i].dim_col]
+
+
+def keyword_mask(text: np.ndarray, keywords: Sequence[int]) -> np.ndarray:
+    """Bitmask [rows] of which query keywords each row's text contains."""
+    rows = text.shape[0]
+    mask = np.zeros((rows,), np.int64)
+    for bit, kw in enumerate(keywords):
+        mask |= (text == kw).any(axis=1).astype(np.int64) << bit
+    return mask
+
+
+def count_token(text: np.ndarray, token: int) -> np.ndarray:
+    """Occurrences (with multiplicity) of ``token`` per row."""
+    return (text == token).sum(axis=1).astype(np.int64)
+
+
+def tokens_histogram(text: np.ndarray, weights: np.ndarray, vocab: int) -> np.ndarray:
+    """Weighted token histogram: hist[w] = sum_rows weight[row]*count(row, w).
+
+    Host/numpy oracle used by the single-machine star baseline.
+    """
+    flat = text.reshape(-1)
+    w = np.repeat(np.asarray(weights, np.int64), text.shape[1])
+    hist = np.bincount(flat, weights=w, minlength=vocab)[:vocab]
+    hist[PAD_ID] = 0
+    return hist.astype(np.int64)
+
+
+def as_device_arrays(rel: Relation) -> dict:
+    """Pack a relation into jnp arrays (used by the device jobs)."""
+    out = {f"key:{c}": jnp.asarray(v) for c, v in rel.keys.items()}
+    out["text"] = jnp.asarray(rel.text)
+    return out

@@ -1,0 +1,99 @@
+"""Fault-tolerant checkpointing: atomic, step-numbered, mesh-agnostic.
+
+Layout:   <dir>/step_000123/arrays.npz + manifest.json   (tmp-dir + rename,
+so a crash mid-save never corrupts the latest checkpoint).  Restore is
+mesh-agnostic: arrays are saved unsharded (host gather) and re-placed with
+``jax.device_put`` against whatever mesh/sharding the *restarted* job uses —
+this is the elastic-restart path (checkpoint on 256 chips, resume on 512 or
+on 8).  At real scale the same layout holds per-process shard files; the
+gather/scatter becomes per-host (noted in DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
+            # npz can't round-trip ml_dtypes; widen losslessly to f32
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, keep: int = 3) -> str:
+    base = pathlib.Path(ckpt_dir)
+    base.mkdir(parents=True, exist_ok=True)
+    final = base / f"step_{step:08d}"
+    tmp = pathlib.Path(tempfile.mkdtemp(dir=base, prefix=".tmp_"))
+    arrays = _flatten(tree)
+    np.savez(tmp / "arrays.npz", **arrays)
+    treedef = jax.tree_util.tree_structure(tree)
+    (tmp / "manifest.json").write_text(json.dumps({
+        "step": step,
+        "treedef": str(treedef),
+        "keys": sorted(arrays.keys()),
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+    }))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)                     # atomic publish
+    _prune(base, keep)
+    return str(final)
+
+
+def _prune(base: pathlib.Path, keep: int):
+    steps = sorted(p for p in base.iterdir() if p.name.startswith("step_"))
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    base = pathlib.Path(ckpt_dir)
+    if not base.exists():
+        return None
+    steps = sorted(p.name for p in base.iterdir()
+                   if p.name.startswith("step_")
+                   and (p / "manifest.json").exists())
+    return int(steps[-1].split("_")[1]) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, template: Any,
+                       step: Optional[int] = None,
+                       shardings: Any = None) -> Tuple[int, Any]:
+    """Restore into ``template``'s structure; optionally place onto
+    ``shardings`` (a matching tree of NamedSharding) — the elastic path."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        assert step is not None, f"no checkpoint under {ckpt_dir}"
+    d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    data = np.load(d / "arrays.npz")
+    flat_t = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    shard_flat = (jax.tree_util.tree_flatten(shardings)[0]
+                  if shardings is not None else None)
+    for i, (path, leaf) in enumerate(flat_t[0]):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = data[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        if shard_flat is not None:
+            leaves.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return step, jax.tree_util.tree_unflatten(flat_t[1], leaves)

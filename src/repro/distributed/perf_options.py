@@ -1,0 +1,51 @@
+"""Perf-iteration switches (§Perf hillclimbs in EXPERIMENTS.md).
+
+Each option is one hypothesis→change pair from the §Perf log, toggled via
+``repro.launch.dryrun --opts a,b,c`` so the paper-faithful baseline and each
+optimized variant lower from the same code.
+
+    bf16_flash      flash-attention block math in bf16 (f32 softmax stats
+                    only) — halves the dominant activation traffic
+    seq_shard_attn  shard the flash q-block axis over "model" (sequence
+                    parallelism for attention; k/v all-gathered, S²/16
+                    attention work per device instead of replicated S²)
+    moe_shardmap    explicit shard_map expert-parallel MoE (psum combine)
+                    instead of GSPMD scatter — the paper's routing analogue
+    remat_dots      checkpoint policy dots_with_no_batch_dims_saveable
+    no_fsdp         replicate weights over "data" (kills per-layer
+                    all-gathers for small models)
+    flash_big_blocks  q-block 512->2048: flash re-reads K/V once per q
+                    block, so 4x fewer K/V passes (VMEM still fits:
+                    2048x512 f32 scores = 4 MB)
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import FrozenSet
+
+_ACTIVE: FrozenSet[str] = frozenset()
+
+KNOWN = frozenset({"bf16_flash", "seq_shard_attn", "moe_shardmap",
+                   "remat_dots", "no_fsdp", "flash_big_blocks",
+                   "rwkv_chunked"})
+
+
+def active() -> FrozenSet[str]:
+    return _ACTIVE
+
+
+def enabled(name: str) -> bool:
+    return name in _ACTIVE
+
+
+@contextlib.contextmanager
+def perf_options(*names: str):
+    global _ACTIVE
+    bad = set(names) - KNOWN
+    assert not bad, f"unknown perf options: {bad}"
+    old = _ACTIVE
+    _ACTIVE = frozenset(names) | old
+    try:
+        yield
+    finally:
+        _ACTIVE = old

@@ -1,0 +1,251 @@
+"""Sharding rules: explicit logical-spec trees mirroring the param/cache
+structure, mapped to mesh axes with divisibility fallback.
+
+Baseline parallelism (DESIGN.md §5):
+  * batch  -> dp axes ("pod","data")        (DP across pods and data axis)
+  * heads / d_ff / vocab / experts -> "model"   (TP / EP)
+  * weight storage additionally sharded on "data" (FSDP) when enabled
+Axes that do not divide (e.g. smollm's 15 heads on a 16-way model axis)
+fall back to replication — recorded, not fatal.  The shares optimizer from
+the paper (core/shares.py) is reused in §Perf to pick axis sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.model import decompose
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    tp: Optional[str] = "model"
+    fsdp: Optional[str] = "data"           # None = pure DP replication
+    dp: Tuple[str, ...] = ("data",)        # batch axes (pod prepended if multi)
+    shard_experts: bool = True
+
+
+# --- logical spec templates (trailing dims) --------------------------------
+
+def _attn_specs(r: ShardingRules):
+    return {
+        "wq": P(r.fsdp, r.tp, None),
+        "wk": P(r.fsdp, r.tp, None),
+        "wv": P(r.fsdp, r.tp, None),
+        "wo": P(r.tp, None, r.fsdp),
+    }
+
+
+def _mla_specs(r: ShardingRules):
+    return {
+        "w_dq": P(r.fsdp, None), "q_norm": P(None),
+        "w_uq": P(None, r.tp, None),
+        "w_dkv": P(r.fsdp, None), "kv_norm": P(None),
+        "w_kr": P(r.fsdp, None),
+        "w_uk": P(None, r.tp, None),
+        "w_uv": P(None, r.tp, None),
+        "wo": P(r.tp, None, r.fsdp),
+    }
+
+
+def _mlp_specs(r: ShardingRules, act: str):
+    if act in ("swiglu", "geglu"):
+        return {"w_gate": P(r.fsdp, r.tp), "w_up": P(r.fsdp, r.tp),
+                "w_down": P(r.tp, r.fsdp)}
+    return {"w_up": P(r.fsdp, r.tp), "w_down": P(r.tp, r.fsdp)}
+
+
+def _moe_specs(r: ShardingRules, cfg: ArchConfig):
+    ep = r.tp if r.shard_experts else None
+    inner = None if ep else r.tp
+    p = {
+        "router": P(None, None),
+        "w_gate": P(ep, r.fsdp, inner),
+        "w_up": P(ep, r.fsdp, inner),
+        "w_down": P(ep, inner, r.fsdp),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = _mlp_specs(r, "swiglu")
+    return p
+
+
+def _rglru_specs(r: ShardingRules):
+    return {
+        "w_x": P(r.fsdp, r.tp), "w_gate_branch": P(r.fsdp, r.tp),
+        "conv_w": P(None, r.tp), "conv_b": P(r.tp),
+        "w_a": P(None, r.tp), "b_a": P(r.tp),
+        "w_i": P(None, r.tp), "b_i": P(r.tp),
+        "lam": P(r.tp),
+        "w_o": P(r.tp, r.fsdp),
+    }
+
+
+def _rwkv_tmix_specs(r: ShardingRules):
+    return {
+        "mix_base": P(None, None),
+        "w_r": P(r.fsdp, r.tp), "w_k": P(r.fsdp, r.tp),
+        "w_v": P(r.fsdp, r.tp), "w_g": P(r.fsdp, r.tp),
+        "w0": P(r.tp), "w_lora_a": P(r.fsdp, None),
+        "w_lora_b": P(None, r.tp), "u": P(r.tp),
+        "gn_scale": P(r.tp), "w_o": P(r.tp, r.fsdp),
+    }
+
+
+def _rwkv_cmix_specs(r: ShardingRules):
+    return {"mix_base": P(None, None), "w_k": P(r.fsdp, r.tp),
+            "w_v": P(r.tp, r.fsdp), "w_r": P(r.fsdp, r.tp)}
+
+
+def _norm_specs(cfg: ArchConfig):
+    if cfg.norm == "nonparam_ln":
+        return {}
+    p = {"scale": P(None)}
+    if cfg.norm == "layernorm":
+        p["bias"] = P(None)
+    return p
+
+
+def _block_specs(cfg: ArchConfig, block, r: ShardingRules):
+    mixer, ffn = block
+    if mixer in ("attn", "local", "enc"):
+        mx = _attn_specs(r)
+    elif mixer == "mla":
+        mx = _mla_specs(r)
+    elif mixer == "rglru":
+        mx = _rglru_specs(r)
+    else:
+        mx = _rwkv_tmix_specs(r)
+    if ffn == "mlp":
+        fn = _mlp_specs(r, cfg.activation)
+    elif ffn == "moe":
+        fn = _moe_specs(r, cfg)
+    else:
+        fn = _rwkv_cmix_specs(r)
+    return {"norm1": _norm_specs(cfg), "mixer": mx,
+            "norm2": _norm_specs(cfg), "ffn": fn}
+
+
+def param_specs(cfg: ArchConfig, r: ShardingRules):
+    """PartitionSpec tree mirroring models.model.init_params."""
+    layout = decompose(cfg.blocks())
+    specs = {}
+    if cfg.frontend is None or cfg.frontend == "patch":
+        specs["embed"] = {"table": P(r.tp, r.fsdp)}
+    if cfg.frontend is not None:
+        specs["frontend_proj"] = {"w": P(None, r.fsdp)}
+        if cfg.frontend == "frame":
+            specs["pos_embed"] = P(None, r.fsdp)
+
+    def blocks_tree(blocks, stacked: bool):
+        tree = {str(i): _block_specs(cfg, b, r) for i, b in enumerate(blocks)}
+        if stacked:
+            tree = jax.tree.map(
+                lambda s: P(*((None,) + tuple(s))), tree,
+                is_leaf=lambda x: isinstance(x, P))
+        return tree
+
+    if layout.prefix:
+        specs["prefix"] = blocks_tree(layout.prefix, False)
+    specs["body"] = blocks_tree(layout.unit, True)
+    if layout.suffix:
+        specs["suffix"] = blocks_tree(layout.suffix, False)
+    specs["out_norm"] = _norm_specs(cfg)
+    if not cfg.tie_embeddings:
+        specs["head"] = {"w_out": P(r.fsdp, r.tp)}
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, r: ShardingRules):
+    """PartitionSpec tree mirroring models.model.init_cache."""
+    layout = decompose(cfg.blocks())
+    dp = P(r.dp) if len(r.dp) == 1 else P(tuple(r.dp))
+    dpax = tuple(r.dp)
+
+    def block_cache(block):
+        mixer, ffn = block
+        if mixer in ("attn", "local", "enc"):
+            c = {"kv": {"k": P(dpax, None, r.tp, None),
+                        "v": P(dpax, None, r.tp, None),
+                        "pos": P(None)}}
+        elif mixer == "mla":
+            c = {"kv": {"c_kv": P(dpax, None, None),
+                        "k_rope": P(dpax, None, None)}}
+        elif mixer == "rglru":
+            c = {"rec": {"h": P(dpax, r.tp),
+                         "conv": P(dpax, None, r.tp)}}
+        else:
+            c = {"tmix": {"s": P(dpax, r.tp, None, None),
+                          "x_prev": P(dpax, None, None)}}
+        if ffn == "cmix":
+            c["cmix"] = {"x_prev": P(dpax, None, None)}
+        return c
+
+    specs = {}
+
+    def one(blocks):
+        return {str(i): block_cache(b) for i, b in enumerate(blocks)}
+
+    if layout.prefix:
+        specs["prefix"] = one(layout.prefix)
+    specs["body"] = jax.tree.map(
+        lambda s: P(*((None,) + tuple(s))), one(layout.unit),
+        is_leaf=lambda x: isinstance(x, P))
+    if layout.suffix:
+        specs["suffix"] = one(layout.suffix)
+    return specs
+
+
+def batch_specs(cfg: ArchConfig, r: ShardingRules):
+    dpax = tuple(r.dp)
+    if cfg.frontend == "frame":
+        return {"frames": P(dpax, None, None), "labels": P(dpax, None)}
+    if cfg.frontend == "patch":
+        return {"patches": P(dpax, None, None), "tokens": P(dpax, None),
+                "labels": P(dpax, None)}
+    return {"tokens": P(dpax, None), "labels": P(dpax, None)}
+
+
+def opt_specs(pspecs):
+    return {"m": pspecs, "v": pspecs, "count": P()}
+
+
+# --- sanitize against concrete shapes + mesh --------------------------------
+
+def sanitize(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes that don't divide the dim; dedupe repeated axes."""
+    used = set()
+    out = []
+    ndim = len(shape)
+    spec_t = tuple(spec) + (None,) * (ndim - len(tuple(spec)))
+    for d, ax in enumerate(spec_t[:ndim]):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        keep = []
+        size = 1
+        for a in axes:
+            if a in used or a not in mesh.shape:
+                continue
+            keep.append(a)
+            size *= mesh.shape[a]
+        if keep and shape[d] % int(np.prod([mesh.shape[a] for a in keep])) == 0:
+            for a in keep:
+                used.add(a)
+            out.append(tuple(keep) if len(keep) > 1 else keep[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def to_shardings(spec_tree, shape_tree, mesh: Mesh):
+    """spec tree + abstract value tree -> NamedSharding tree (sanitized)."""
+    def one(spec, aval):
+        return NamedSharding(mesh, sanitize(spec, aval.shape, mesh))
+    return jax.tree.map(one, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))

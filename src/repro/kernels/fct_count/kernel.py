@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: weighted token histogram via one-hot MXU matmul.
+
+Hardware adaptation (DESIGN.md §2): the GPU/CPU instinct for a histogram is
+scatter-add; TPUs have no fast vector scatter, but the MXU turns the same
+reduction into a matmul:
+
+    hist[v0:v0+VB] += wᵀ · one_hot(tokens_block)[·, v0:v0+VB]
+
+Grid = (vocab_blocks, token_blocks); the token axis is the inner (fastest)
+grid dimension, so each vocab tile of the output stays resident in VMEM while
+every token block streams through — one output write per vocab tile.
+
+VMEM working set per step:  NB·L·4 (tokens) + NB·4 (weights) + VB·4 (hist)
++ NB·L·VB·4 transient one-hot; with NB·L = 1024, VB = 512 that is ~2.2 MB,
+comfortably under the ~16 MB/core budget, and the matmul contraction
+dimension (NB·L = 1024) and output tile (VB = 512) are MXU-aligned
+(multiples of 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.data.schema import PAD_ID
+
+DEFAULT_TOKEN_BLOCK = 128   # rows per block (NB)
+DEFAULT_VOCAB_BLOCK = 512   # vocab tile (VB)
+
+
+def _fct_count_kernel(tokens_ref, weights_ref, hist_ref, *, vocab_block: int):
+    nb, l = tokens_ref.shape
+    v0 = pl.program_id(0) * vocab_block
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    tok = tokens_ref[...].reshape(nb * l)
+    w = jnp.repeat(weights_ref[...], l).astype(jnp.float32)
+    w = jnp.where(tok == PAD_ID, 0.0, w)
+    vocab_ids = v0 + jax.lax.broadcasted_iota(jnp.int32, (nb * l, vocab_block), 1)
+    onehot = (tok[:, None] == vocab_ids).astype(jnp.float32)
+    # [1, NB*L] @ [NB*L, VB] on the MXU
+    contrib = jnp.dot(w[None, :], onehot,
+                      preferred_element_type=jnp.float32)[0]
+    hist_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("vocab", "token_block",
+                                             "vocab_block", "interpret"))
+def fct_count_pallas(tokens: jnp.ndarray, weights: jnp.ndarray, vocab: int,
+                     token_block: int = DEFAULT_TOKEN_BLOCK,
+                     vocab_block: int = DEFAULT_VOCAB_BLOCK,
+                     interpret: bool = False) -> jnp.ndarray:
+    """tokens [N, L] int32 (N % token_block == 0, vocab % vocab_block == 0)."""
+    n, l = tokens.shape
+    assert n % token_block == 0 and vocab % vocab_block == 0
+    grid = (vocab // vocab_block, n // token_block)
+    out = pl.pallas_call(
+        functools.partial(_fct_count_kernel, vocab_block=vocab_block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((token_block, l), lambda i, j: (j, 0)),
+            pl.BlockSpec((token_block,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((vocab_block,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((vocab,), jnp.float32),
+        interpret=interpret,
+    )(tokens, weights.astype(jnp.float32))
+    return out.at[PAD_ID].set(0.0)

@@ -1,0 +1,51 @@
+"""Public op: weighted token histogram with backend dispatch.
+
+TPU      -> Pallas one-hot-MXU kernel (kernel.py)
+CPU/GPU  -> pure-jnp segment-sum oracle (ref.py)
+Tests force ``backend='interpret'`` to execute the kernel body on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fct_count import ref
+from repro.kernels.fct_count.kernel import (DEFAULT_TOKEN_BLOCK,
+                                            DEFAULT_VOCAB_BLOCK,
+                                            fct_count_pallas)
+
+
+def _pad_to(x: jnp.ndarray, multiple: int, value) -> jnp.ndarray:
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    cfg = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, cfg, constant_values=value)
+
+
+def weighted_histogram(tokens: jnp.ndarray, weights: jnp.ndarray, vocab: int,
+                       backend: str = "auto") -> jnp.ndarray:
+    """freq[w] = Σ_rows weight[row]·count(tokens[row], w); PAD excluded.
+
+    Output dtype follows ``weights`` for ref, float32 for the kernel path
+    (exact for counts < 2^24; the FCT engine casts back to int32).
+    """
+    if backend == "auto":
+        platform = jax.default_backend()
+        backend = "pallas" if platform == "tpu" else "ref"
+    if backend == "ref":
+        return ref.weighted_histogram(tokens, weights, vocab)
+    interpret = backend == "interpret"
+    vb = DEFAULT_VOCAB_BLOCK if vocab % DEFAULT_VOCAB_BLOCK == 0 else _pick_block(vocab)
+    toks = _pad_to(tokens, DEFAULT_TOKEN_BLOCK, 0)
+    w = _pad_to(weights, DEFAULT_TOKEN_BLOCK, 0)
+    out = fct_count_pallas(toks, w, vocab, vocab_block=vb, interpret=interpret)
+    return out.astype(weights.dtype)
+
+
+def _pick_block(vocab: int) -> int:
+    for vb in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if vocab % vb == 0:
+            return vb
+    return 1

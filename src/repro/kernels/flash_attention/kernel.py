@@ -1,0 +1,130 @@
+"""Pallas TPU flash attention (blocked online softmax, causal/local/full, GQA).
+
+Grid (b·h, q_blocks, kv_blocks), kv innermost; running (m, l, acc) live in
+VMEM scratch across the kv sweep and the output block is written at the last
+kv step.  Block sizes default to 512×512 — MXU-aligned and ≤ ~4 MB VMEM for
+head_dim ≤ 256.  Whole blocks outside the causal/local band are skipped with
+``pl.when`` (no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bq: int, bk: int, nk: int, causal: bool, window: Optional[int],
+            scale: float, sq: int, skv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q0 = qi * bq
+    k0 = ki * bk
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # [bq, d]
+        k = k_ref[0].astype(jnp.float32)                  # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        valid = kpos < skv
+        if causal or window is not None:
+            delta = qpos - kpos
+            valid &= delta >= 0
+            if window is not None:
+                valid &= delta < window
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if causal or window is not None:
+        # block-level skip: whole block outside the causal/local band
+        needed = k0 <= q0 + bq - 1
+        if window is not None:
+            needed = jnp.logical_and(needed, k0 + bk - 1 >= q0 - (window - 1))
+        pl.when(needed)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = 512, block_k: int = 512,
+                           interpret: bool = False):
+    """q [B,Sq,H,D], k/v [B,Skv,Hkv,D] (GQA) -> [B,Sq,H,D]."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[3]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    pad_q = (-sq) % bq
+    pad_k = (-skv) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq = q.shape[1] // bq
+    nk = k.shape[1] // bk
+
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, q.shape[1], d)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * hkv, k.shape[1], d)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * hkv, v.shape[1], dv)
+
+    def kv_index(bh, qi, ki):
+        bb, hh = bh // h, bh % h
+        return (bb * hkv + hh // g, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
+                          window=window, scale=scale, sq=sq, skv=skv),
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, dv), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, q.shape[1], dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(b, h, q.shape[1], dv)[:, :, :sq]
+    return jnp.moveaxis(out, 1, 2)

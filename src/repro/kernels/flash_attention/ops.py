@@ -1,0 +1,23 @@
+"""Public flash-attention op with backend dispatch (TPU→Pallas, else ref)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    backend: str = "auto"):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return ref.flash_attention(q, k, v, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=backend == "interpret")

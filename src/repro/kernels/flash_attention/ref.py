@@ -1,0 +1,114 @@
+"""Pure-jnp blocked streaming attention (online softmax) — the oracle for the
+Pallas kernel AND the XLA fallback used by the models on CPU.
+
+Never materializes the [Sq, Skv] score matrix: outer scan over query blocks,
+inner scan over kv blocks with running (max, denom, acc) — so the dry-run's
+memory_analysis reflects a flash-style implementation rather than naive
+attention.  Supports causal / local-window / full (encoder) masks and GQA.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import constrain
+from repro.distributed.perf_options import enabled as perf_enabled
+
+NEG_INF = -2.0e38
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    scale: Optional[float] = None):
+    """q [B,Sq,H,D], k/v [B,Skv,Hkv,D] -> [B,Sq,H,D].
+
+    ``window``: only attend to keys with 0 <= q_pos - k_pos < window
+    (implies causal).  Query/key positions are aligned at 0.
+    """
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[3]
+    g = h // hkv
+    in_dtype = q.dtype
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    if perf_enabled("flash_big_blocks"):
+        block_q = max(block_q, 2048)
+    if perf_enabled("seq_shard_attn"):
+        # one q block per model rank so the vmapped block axis shards evenly
+        from repro.distributed.act_sharding import _CTX as _ACT
+        mesh, amap = _ACT["mesh"], _ACT["map"]
+        if mesh is not None and amap.get("sp") in mesh.shape:
+            tp_size = mesh.shape[amap["sp"]]
+            if sq % tp_size == 0 and sq // tp_size >= 128:
+                block_q = sq // tp_size
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    pad_q = (-sq) % bq
+    pad_k = (-skv) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = q.shape[1] // bq, k.shape[1] // bk
+
+    # §Perf option "bf16_flash": block math in the input dtype (f32 softmax
+    # stats only) — halves the q/k/v block traffic the XLA path materializes
+    blk_dt = in_dtype if perf_enabled("bf16_flash") else jnp.float32
+    qb = ((q.astype(jnp.float32) * scale)
+          .reshape(b, nq, bq, hkv, g, d).astype(blk_dt))
+    kb = k.reshape(b, nk, bk, hkv, d).astype(blk_dt)
+    vb = v.reshape(b, nk, bk, hkv, dv).astype(blk_dt)
+
+    def q_block(qi, qblk):
+        # qblk [b, bq, hkv, g, d]
+        m0 = jnp.full((b, bq, hkv, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, bq, hkv, g), jnp.float32)
+        a0 = jnp.zeros((b, bq, hkv, g, dv), jnp.float32)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk = kb[:, ki], vb[:, ki]
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qblk, kblk,
+                           preferred_element_type=jnp.float32)
+            qpos = qi * bq + jnp.arange(bq)
+            kpos = ki * bk + jnp.arange(bk)
+            valid = (kpos < skv)[None, :]  # mask key padding
+            if causal or window is not None:
+                delta = qpos[:, None] - kpos[None, :]
+                ok = delta >= 0
+                if window is not None:
+                    ok &= delta < window
+                valid = valid & ok
+            s = jnp.where(valid[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] \
+                + jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(blk_dt), vblk,
+                             preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    if perf_enabled("seq_shard_attn"):
+        # §Perf option: vmap (not loop) over q blocks and shard that axis on
+        # the model mesh axis — sequence-parallel attention; k/v stay whole
+        # (their per-device copy is cheap next to S²/16 less attention work)
+        qbc = constrain(qb, "dp", "sp", None, "tp", None, None)
+        out = jax.vmap(q_block, in_axes=(0, 1), out_axes=1)(
+            jnp.arange(nq), qbc)
+        out = out.reshape(b, nq * bq, h, dv)[:, :sq]
+    else:
+        out = jax.lax.map(lambda args: q_block(*args),
+                          (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+        out = jnp.moveaxis(out, 0, 1).reshape(b, nq * bq, h, dv)[:, :sq]
+    return out.astype(in_dtype)

@@ -1,0 +1,15 @@
+"""Public lru_scan op with backend dispatch (TPU→Pallas, else assoc-scan)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.lru_scan import ref
+from repro.kernels.lru_scan.kernel import lru_scan_pallas
+
+
+def lru_scan(a, b, backend: str = "auto"):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return ref.lru_scan(a, b)
+    return lru_scan_pallas(a, b, interpret=backend == "interpret")

@@ -1,0 +1,19 @@
+"""Oracle for the diagonal linear recurrence  h_t = a_t ⊙ h_{t-1} + b_t.
+
+Parallel O(log S) associative scan — exactly what the model code uses on
+CPU/XLA.  a, b: [B, S, W] (fp32 recommended for long sequences).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lru_scan(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For one (arch × shape × mesh) cell:  build abstract params/optimizer/cache
+(ShapeDtypeStruct — zero allocation), attach NamedShardings from the rules,
+``jit(step).lower(...).compile()`` on the production mesh, print
+memory_analysis / cost_analysis, and emit the roofline terms as JSON.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma-7b --shape train_4k \
+        --mesh single --out out.json
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ArchConfig, cell_is_runnable, get_arch
+from repro.distributed import act_sharding
+from repro.distributed import sharding as sh
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_lib
+from repro.train.optimizer import init_opt_state
+from repro.train.step import make_serve_step, make_train_step
+
+
+def _abstract(tree, sharding_tree):
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        tree, sharding_tree)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str):
+    """Abstract model inputs for a shape suite (ShapeDtypeStruct stand-ins)."""
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.frontend == "frame":
+        return {"frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                               jnp.float32),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.frontend == "patch":
+        n_patch = max(1, s // cfg.patch_frac)
+        return {"patches": jax.ShapeDtypeStruct((b, n_patch,
+                                                 cfg.frontend_dim),
+                                                jnp.float32),
+                "tokens": jax.ShapeDtypeStruct((b, s - n_patch), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, s - n_patch), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+
+
+def count_params(cfg: ArchConfig):
+    """(total, active, matmul_active) parameter counts from abstract init."""
+    pshapes = jax.eval_shape(
+        lambda: model_lib.init_params(cfg, jax.random.PRNGKey(0)))
+    flat = jax.tree_util.tree_flatten_with_path(pshapes)[0]
+    total = active = matmul = 0
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        names = [getattr(p, "key", str(p)) for p in path]
+        total += n
+        routed = (cfg.n_experts > 0 and "ffn" in names
+                  and any(d == cfg.n_experts for d in leaf.shape)
+                  and "shared" not in names and "router" not in names)
+        a = n * (cfg.moe_top_k / cfg.n_experts) if routed else n
+        active += a
+        is_table = "table" in names or "pos_embed" in names
+        if not is_table or cfg.tie_embeddings:
+            matmul += a
+    return total, active, matmul
+
+
+def model_flops(cfg: ArchConfig, shape, matmul_params: float) -> float:
+    if shape.kind == "train":
+        return 6.0 * matmul_params * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * matmul_params * shape.global_batch * shape.seq_len
+    return 2.0 * matmul_params * shape.global_batch  # decode: one token
+
+
+def build_cell(cfg: ArchConfig, shape_name: str, mesh, rules: sh.ShardingRules,
+               donate: bool = True):
+    """Returns (jitted_fn, abstract_args) ready to .lower()."""
+    shape = SHAPES[shape_name]
+    pspecs = sh.param_specs(cfg, rules)
+    pshapes = jax.eval_shape(
+        lambda: model_lib.init_params(cfg, jax.random.PRNGKey(0)))
+    pshard = sh.to_shardings(pspecs, pshapes, mesh)
+    params = _abstract(pshapes, pshard)
+
+    if shape.kind == "decode":
+        cshapes = jax.eval_shape(
+            lambda: model_lib.init_cache(cfg, shape.global_batch,
+                                         shape.seq_len))
+        cspecs = sh.cache_specs(cfg, rules)
+        cshard = sh.to_shardings(cspecs, cshapes, mesh)
+        cache = _abstract(cshapes, cshard)
+        tokens = jax.ShapeDtypeStruct(
+            (shape.global_batch, 1), jnp.int32,
+            sharding=jax.NamedSharding(
+                mesh, sh.sanitize(jax.sharding.PartitionSpec(tuple(rules.dp)),
+                                  (shape.global_batch, 1), mesh)))
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = make_serve_step(cfg)
+        jfn = jax.jit(fn, donate_argnums=(1,) if donate else ())
+        return jfn, (params, cache, tokens, pos)
+
+    batch_sh = sh.to_shardings(sh.batch_specs(cfg, rules),
+                               input_specs(cfg, shape_name), mesh)
+    batch = _abstract(input_specs(cfg, shape_name), batch_sh)
+    if shape.kind == "prefill":
+        fn = lambda p, b: model_lib.forward(p, b, cfg)[0]
+        return jax.jit(fn), (params, batch)
+    # train
+    oshapes = jax.eval_shape(lambda: init_opt_state(pshapes))
+    ospecs = sh.opt_specs(pspecs)
+    oshard = sh.to_shardings(ospecs, oshapes, mesh)
+    opt = _abstract(oshapes, oshard)
+    fn = make_train_step(cfg)
+    jfn = jax.jit(fn, donate_argnums=(0, 1) if donate else ())
+    return jfn, (params, opt, batch)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             fsdp: bool = True, verbose: bool = True,
+             opts: tuple = ()) -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_is_runnable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "opts": ",".join(opts),
+           "status": "skip", "reason": reason}
+    if not ok:
+        return rec
+    t0 = time.time()
+    from repro.distributed.perf_options import perf_options
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = ("pod", "data") if multi_pod else ("data",)
+    if "no_fsdp" in opts:
+        fsdp = False
+    rules = sh.ShardingRules(dp=dp, fsdp="data" if fsdp else None)
+    sp = "model" if "seq_shard_attn" in opts else None
+    with perf_options(*opts):
+        jfn, args = build_cell(cfg, shape_name, mesh, rules)
+        with act_sharding.activation_sharding(mesh, dp, rules.tp, sp=sp):
+            lowered = jfn.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    total, active, matmul = count_params(cfg)
+    mf = model_flops(cfg, shape, matmul)
+    roof = rl.analyze(compiled, model_flops=mf)
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "params_total": total, "params_active": active,
+        "arg_bytes_per_dev": mem.argument_size_in_bytes,
+        "temp_bytes_per_dev": mem.temp_size_in_bytes,
+        "out_bytes_per_dev": mem.output_size_in_bytes,
+        "alias_bytes_per_dev": mem.alias_size_in_bytes,
+        "roofline": roof.to_dict(),
+        "roofline_fraction": rl.roofline_fraction(roof),
+    })
+    if verbose:
+        print(f"[{arch} {shape_name} {rec['mesh']}] "
+              f"compile={t_compile:.0f}s "
+              f"flops/dev={roof.flops:.3e} hbm/dev={roof.hbm_bytes:.3e} "
+              f"coll/dev={roof.collective_bytes:.3e} "
+              f"bottleneck={roof.bottleneck} "
+              f"frac={rec['roofline_fraction']:.3f} "
+              f"mem/dev={roof.per_device_memory_gb:.2f}GB")
+        print("  memory_analysis:", mem)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--opts", default="", help="comma-separated perf options")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    opts = tuple(o for o in args.opts.split(",") if o)
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh == "multi",
+                       fsdp=not args.no_fsdp, opts=opts)
+    except Exception as e:  # noqa: BLE001 — recorded as a failed cell
+        traceback.print_exc()
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "status": "error", "reason": f"{type(e).__name__}: {e}"}
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=1)
+    print(json.dumps({k: v for k, v in rec.items() if k != "roofline"}))
+    return 0 if rec["status"] in ("ok", "skip") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

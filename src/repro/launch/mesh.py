@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — DP across
+pods (DCN-tolerant: one gradient all-reduce per step crosses the pod axis),
+TP/EP confined to the intra-pod "model" axis.
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)} — "
+            "run under launch/dryrun.py which forces 512 host devices")
+    dev = np.array(devices[:need]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_worker_mesh(n: int | None = None):
+    """Flat ('w',) mesh for the FCT engine (hypercube tasks map onto it)."""
+    devices = jax.devices() if n is None else jax.devices()[:n]
+    return jax.sharding.Mesh(np.array(devices), ("w",))

@@ -1,0 +1,65 @@
+"""Render EXPERIMENTS.md tables from results/dryrun/all.jsonl."""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+
+def load(path="results/dryrun/all.jsonl"):
+    recs = [json.loads(l) for l in open(path)]
+    seen = {}
+    for r in recs:  # keep last per cell
+        seen[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(seen.values())
+
+
+def roofline_table(recs, mesh="16x16"):
+    rows = []
+    print(f"| arch | shape | comp s | mem s | coll s | bottleneck | "
+          f"frac | GB/dev | useful |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(recs, key=lambda r: (r["arch"], order[r["shape"]])):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skip":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                  f"skipped: {r['reason']} | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                  f"ERROR | — | — | — |")
+            continue
+        rf = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3f} | "
+              f"{rf['memory_s']:.3f} | {rf['collective_s']:.3f} | "
+              f"{rf['bottleneck']} | {r['roofline_fraction']:.4f} | "
+              f"{rf['per_device_memory_gb']:.1f} | {rf['useful_ratio']:.3f} |")
+
+
+def dryrun_table(recs):
+    print("| arch | shape | mesh | status | compile s | args GB/dev | "
+          "temp GB/dev | coll GB/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(recs, key=lambda r: (r["arch"], order[r["shape"]],
+                                         r["mesh"])):
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"{r['status']}: {r.get('reason','')[:50]} | — | — | — | — |")
+            continue
+        rf = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+              f"{r['compile_s']:.0f} | {r['arg_bytes_per_dev']/1e9:.2f} | "
+              f"{r['temp_bytes_per_dev']/1e9:.2f} | "
+              f"{rf['collective_bytes']/1e9:.2f} |")
+
+
+if __name__ == "__main__":
+    recs = load()
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    if which == "roofline":
+        roofline_table(recs)
+    elif which == "dryrun":
+        dryrun_table(recs)

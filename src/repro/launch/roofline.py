@@ -1,0 +1,86 @@
+"""Roofline analysis from a compiled SPMD module (no hardware required).
+
+Terms (TPU v5e targets; DESIGN.md §8):
+    compute    = flops_per_device            / 197e12  FLOP/s (bf16)
+    memory     = hbm_bytes_per_device        / 819e9   B/s
+    collective = collective_bytes_per_device / 50e9    B/s (per ICI link)
+
+flops / bytes / collective bytes come from the trip-count-aware HLO walk in
+``hlo_analysis.py`` — XLA's own ``compiled.cost_analysis()`` counts while
+(scan) bodies once, silently undercounting every scan-over-layers model, so
+its raw numbers are reported only as ``xla_raw_*`` diagnostics.  Collective
+traffic uses a ring model:
+    all-gather       moved ≈ result_bytes · (n-1)/n
+    all-reduce       moved ≈ 2 · result_bytes · (n-1)/n
+    reduce-scatter   moved ≈ result_bytes · (n-1)          (result is scattered)
+    all-to-all       moved ≈ result_bytes · (n-1)/n
+    collective-permute  moved = result_bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.launch.hlo_analysis import analyze_text
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collectives: Dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float
+    per_device_memory_gb: float
+    xla_raw_flops: float
+    xla_raw_bytes: float
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, model_flops: float = 0.0, n_devices: int = 256,
+            hlo_text: Optional[str] = None) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    totals = analyze_text(text)
+    model_flops_dev = model_flops / max(n_devices, 1)
+    terms = {
+        "compute": totals.flops / PEAK_FLOPS,
+        "memory": totals.bytes / HBM_BW,
+        "collective": totals.collective_bytes / ICI_BW,
+    }
+    bottleneck = max(terms, key=terms.get)
+    mem = compiled.memory_analysis()
+    per_dev = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+               + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    return Roofline(
+        flops=totals.flops, hbm_bytes=totals.bytes,
+        collective_bytes=totals.collective_bytes,
+        collectives=totals.collectives,
+        compute_s=terms["compute"], memory_s=terms["memory"],
+        collective_s=terms["collective"], bottleneck=bottleneck,
+        model_flops=model_flops_dev,
+        useful_ratio=(model_flops_dev / totals.flops) if totals.flops else 0.0,
+        per_device_memory_gb=per_dev / 1e9,
+        xla_raw_flops=float(ca.get("flops", 0.0)),
+        xla_raw_bytes=float(ca.get("bytes accessed", 0.0)),
+    )
+
+
+def roofline_fraction(r: Roofline) -> float:
+    """Fraction of the compute roofline achievable if compute, HBM and ICI
+    overlap perfectly: useful_model_time / max(term).  This is the score we
+    hillclimb in §Perf."""
+    worst = max(r.compute_s, r.memory_s, r.collective_s)
+    model_time = r.model_flops / PEAK_FLOPS
+    return (model_time / worst) if worst > 0 else 0.0

@@ -1,0 +1,56 @@
+"""Serving launcher: batched greedy decode with the KV/state cache.
+
+CPU-smoke:  python -m repro.launch.serve --arch recurrentgemma-2b \
+                --batch 4 --prompt-len 12 --gen-len 24
+The decode_32k / long_500k dry-run cells lower exactly this serve_step at
+production shapes (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen-len", type=int, default=24)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs.base import get_arch
+    from repro.models import model as M
+    from repro.train.step import make_serve_step
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    assert cfg.has_decode(), f"{cfg.name} is encoder-only"
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    total = args.prompt_len + args.gen_len
+    cache = M.init_cache(cfg, args.batch, total)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    step = jax.jit(make_serve_step(cfg))
+    tok = None
+    t0 = time.time()
+    for t in range(args.prompt_len):
+        tok, cache = step(params, cache, prompts[:, t:t + 1], t)
+    gen = [tok]
+    for t in range(args.prompt_len, total - 1):
+        tok, cache = step(params, cache, tok[:, None], t)
+        gen.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    n = args.batch * (len(gen) + args.prompt_len)
+    print(f"{cfg.name}: {n} tokens through serve_step in {dt:.2f}s "
+          f"({n / dt:.0f} tok/s on this host)")
+
+
+if __name__ == "__main__":
+    main()

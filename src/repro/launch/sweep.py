@@ -1,0 +1,81 @@
+"""Run the full dry-run matrix (arch × shape × mesh) as isolated subprocesses.
+
+One cell per process: a compile crash or OOM only loses that cell, and each
+gets a fresh XLA with the 512-device host flag.  Results land in
+``results/dryrun/<arch>_<shape>_<mesh>.json`` plus an aggregate JSONL.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "recurrentgemma-2b", "pixtral-12b", "smollm-360m", "gemma-7b",
+    "granite-20b", "olmo-1b", "hubert-xlarge", "deepseek-v2-236b",
+    "deepseek-moe-16b", "rwkv6-1.6b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="results/dryrun")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--timeout", type=int, default=1200)
+    ap.add_argument("--only", default=None, help="arch filter substring")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    agg = out_dir / "all.jsonl"
+    done = set()
+    if agg.exists():
+        for line in agg.read_text().splitlines():
+            try:
+                r = json.loads(line)
+                done.add((r["arch"], r["shape"], r["mesh"]))
+            except json.JSONDecodeError:
+                pass
+
+    cells = [(a, s, m) for a in ARCHS for s in SHAPES
+             for m in args.meshes.split(",")]
+    for arch, shape, mesh in cells:
+        mesh_name = "2x16x16" if mesh == "multi" else "16x16"
+        if (arch, shape, mesh_name) in done:
+            continue
+        if args.only and args.only not in arch:
+            continue
+        tag = f"{arch}_{shape}_{mesh}".replace("-", "_").replace(".", "_")
+        cell_json = out_dir / f"{tag}.json"
+        t0 = time.time()
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mesh, "--out", str(cell_json)]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src"
+        try:
+            proc = subprocess.run(cmd, capture_output=True, text=True,
+                                  timeout=args.timeout, env=env)
+            if cell_json.exists():
+                rec = json.loads(cell_json.read_text())
+            else:
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "status": "error",
+                       "reason": (proc.stderr or "")[-400:]}
+        except subprocess.TimeoutExpired:
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                   "status": "timeout", "reason": f">{args.timeout}s"}
+        rec["wall_s"] = round(time.time() - t0, 1)
+        with open(agg, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        print(f"{arch:18s} {shape:12s} {mesh_name:8s} "
+              f"{rec['status']:7s} {rec['wall_s']:7.1f}s "
+              f"{rec.get('reason', '')[:60]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

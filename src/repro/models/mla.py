@@ -1,0 +1,125 @@
+"""Multi-head Latent Attention (DeepSeek-V2), with the compressed KV cache.
+
+Train/prefill: standard expansion (q via q-LoRA, k/v expanded from the 512-d
+latent c_kv plus a shared 64-d RoPE key).  Decode: the *absorbed* form — W_uk
+is folded into the query and W_uv into the output projection, so attention
+runs directly against the cached latent (c_kv ‖ k_rope) and the cache is
+(kv_lora_rank + qk_rope_head_dim) per token instead of 2·H·Dh.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import constrain
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.models.common import apply_rope, rmsnorm
+from repro.models.attention import FLASH_MIN_SEQ, NEG_INF
+
+
+def init_mla(key, cfg):
+    ks = jax.random.split(key, 8)
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = cfg.param_dtype
+
+    def w(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32)
+                / math.sqrt(fan_in)).astype(dt)
+
+    return {
+        "w_dq": w(ks[0], (d, qr), d),
+        "q_norm": jnp.ones((qr,), dt),
+        "w_uq": w(ks[1], (qr, h, dn + dr), qr),
+        "w_dkv": w(ks[2], (d, kvr), d),
+        "kv_norm": jnp.ones((kvr,), dt),
+        "w_kr": w(ks[3], (d, dr), d),
+        "w_uk": w(ks[4], (kvr, h, dn), kvr),
+        "w_uv": w(ks[5], (kvr, h, dv), kvr),
+        "wo": w(ks[6], (h, dv, d), h * dv),
+    }
+
+
+def mla_forward(x, p, cfg):
+    """Training/prefill.  Returns (out, (c_kv, k_rope)) — compressed cache."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    cd = cfg.compute_dtype
+    positions = jnp.arange(s)[None, :]
+
+    cq = rmsnorm(x @ p["w_dq"].astype(cd), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"].astype(cd))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = rmsnorm(x @ p["w_dkv"].astype(cd), p["kv_norm"])
+    k_rope = apply_rope((x @ p["w_kr"].astype(cd))[:, :, None, :],
+                        positions, cfg.rope_theta)          # [b,s,1,dr] shared
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"].astype(cd))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"].astype(cd))
+
+    # fold rope/nope into one head dim and run flash (scale 1/sqrt(dn+dr))
+    q_full = constrain(jnp.concatenate([q_nope, q_rope], axis=-1),
+                       "dp", None, "tp", None)
+    k_full = constrain(
+        jnp.concatenate([k_nope, jnp.broadcast_to(k_rope,
+                                                  (b, s, h, dr))], axis=-1),
+        "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+    if s >= FLASH_MIN_SEQ:
+        out = flash_attention(q_full, k_full, v, causal=True)
+    else:
+        scale = 1.0 / math.sqrt(dn + dr)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q_full, k_full) * scale
+        mask = jnp.tril(jnp.ones((s, s), bool))[None, None]
+        scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+        attn = jax.nn.softmax(scores, axis=-1).astype(cd)
+        out = jnp.einsum("bhqk,bkhd->bqhd", attn, v)
+    out = jnp.einsum("bqhd,hdo->bqo", out, p["wo"].astype(cd))
+    return out, (c_kv, k_rope[:, :, 0, :])
+
+
+def init_mla_cache(cfg, batch: int, length: int):
+    return {
+        "c_kv": jnp.zeros((batch, length, cfg.kv_lora_rank), cfg.compute_dtype),
+        "k_rope": jnp.zeros((batch, length, cfg.qk_rope_head_dim),
+                            cfg.compute_dtype),
+    }
+
+
+def mla_decode(x, p, cfg, cache, pos):
+    """Absorbed-matrix decode against the compressed cache.  x [B,1,d]."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    cd = cfg.compute_dtype
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    cq = rmsnorm(x @ p["w_dq"].astype(cd), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"].astype(cd))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)      # [b,1,h,dr]
+    # absorb W_uk: q_lat[b,1,h,kvr] = q_nope · W_uk^T
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"].astype(cd))
+
+    c_new = rmsnorm(x @ p["w_dkv"].astype(cd), p["kv_norm"])    # [b,1,kvr]
+    kr_new = apply_rope((x @ p["w_kr"].astype(cd))[:, :, None, :],
+                        positions, cfg.rope_theta)[:, :, 0, :]  # [b,1,dr]
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new, (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], kr_new, (0, pos, 0))
+
+    scale = 1.0 / math.sqrt(dn + dr)
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat, c_kv)
+              + jnp.einsum("bshr,btr->bhst", q_rope, k_rope)) * scale
+    valid = jnp.arange(c_kv.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, None], scores.astype(jnp.float32),
+                       NEG_INF)
+    attn = jax.nn.softmax(scores, axis=-1).astype(cd)
+    o_lat = jnp.einsum("bhst,btr->bshr", attn, c_kv)            # [b,1,h,kvr]
+    out = jnp.einsum("bshr,rhd->bshd", o_lat, p["w_uv"].astype(cd))
+    out = jnp.einsum("bqhd,hdo->bqo", out, p["wo"].astype(cd))
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

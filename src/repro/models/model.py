@@ -1,0 +1,381 @@
+"""Model assembly: block-pattern decomposition, scan-over-layers, decode.
+
+The per-layer pattern (configs.base.ArchConfig.blocks) is decomposed into
+``prefix + unit × reps + suffix``; the repeated unit runs under ``lax.scan``
+with stacked parameters (small HLO ⇒ tractable SPMD compiles at 512 devices)
+and a remat policy from ``cfg.remat``.  Hybrids like RecurrentGemma scan a
+(rglru, rglru, local) super-block; MoE archs put their first-k-dense layers
+in the prefix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Block
+from repro.distributed.act_sharding import constrain
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.common import (apply_mlp, apply_norm, dense_init,
+                                 embed_tokens, init_embed, init_mlp,
+                                 init_norm, lm_logits)
+
+AUX_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# pattern decomposition
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    prefix: Tuple[Block, ...]
+    unit: Tuple[Block, ...]
+    reps: int
+    suffix: Tuple[Block, ...]
+
+
+def decompose(blocks: Tuple[Block, ...]) -> Layout:
+    best = None
+    n = len(blocks)
+    for pre in range(0, min(4, n) + 1):
+        for ul in range(1, min(4, n - pre) + 1):
+            unit = blocks[pre:pre + ul]
+            reps = 0
+            i = pre
+            while i + ul <= n and blocks[i:i + ul] == unit:
+                reps += 1
+                i += ul
+            suffix = blocks[i:]
+            if reps < 1 or len(suffix) > 4:
+                continue
+            score = (pre + len(suffix), ul)
+            if best is None or score < best[0]:
+                best = (score, Layout(blocks[:pre], unit, reps, suffix))
+    assert best is not None, "pattern not decomposable"
+    return best[1]
+
+
+# ---------------------------------------------------------------------------
+# per-block init / apply
+# ---------------------------------------------------------------------------
+
+def _init_mixer(key, cfg, mixer: str):
+    if mixer in ("attn", "local", "enc"):
+        return attn.init_attention(key, cfg)
+    if mixer == "mla":
+        return mla_mod.init_mla(key, cfg)
+    if mixer == "rglru":
+        return rglru_mod.init_rglru(key, cfg)
+    if mixer == "rwkv":
+        return rwkv_mod.init_rwkv_tmix(key, cfg)
+    raise ValueError(mixer)
+
+
+def _init_ffn(key, cfg, ffn: str):
+    if ffn == "mlp":
+        return init_mlp(key, cfg, cfg.d_ff)
+    if ffn == "moe":
+        return moe_mod.init_moe(key, cfg)
+    if ffn == "cmix":
+        return rwkv_mod.init_rwkv_cmix(key, cfg)
+    raise ValueError(ffn)
+
+
+def init_block(key, cfg, block: Block):
+    mixer, ffn = block
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "norm1": init_norm(k1, cfg),
+        "mixer": _init_mixer(k2, cfg, mixer),
+        "norm2": init_norm(k3, cfg),
+        "ffn": _init_ffn(k4, cfg, ffn),
+    }
+
+
+def apply_block(x, p, cfg, block: Block, aux):
+    """Pre-LN residual block (train/prefill).  Returns (x, aux)."""
+    mixer, ffn = block
+    x = constrain(x, "dp", "sp", None)
+    h = apply_norm(x, p["norm1"], cfg)
+    if mixer in ("attn", "local", "enc"):
+        h, _ = attn.attention_forward(h, p["mixer"], cfg, mixer)
+    elif mixer == "mla":
+        h, _ = mla_mod.mla_forward(h, p["mixer"], cfg)
+    elif mixer == "rglru":
+        h, _ = rglru_mod.rglru_forward(h, p["mixer"], cfg)
+    elif mixer == "rwkv":
+        h, _ = rwkv_mod.rwkv_tmix(h, p["mixer"], cfg)
+    x = x + h
+    h = apply_norm(x, p["norm2"], cfg)
+    if ffn == "mlp":
+        h = apply_mlp(h, p["ffn"], cfg)
+    elif ffn == "moe":
+        h, a = moe_mod.apply_moe(h, p["ffn"], cfg)
+        aux = aux + a
+    elif ffn == "cmix":
+        h, _ = rwkv_mod.rwkv_cmix(h, p["ffn"], cfg)
+    return x + h, aux
+
+
+def init_block_cache(cfg, block: Block, batch: int, length: int):
+    mixer, _ = block
+    if mixer in ("attn", "local", "enc"):
+        return {"kv": attn.init_kv_cache(cfg, batch, length, mixer)}
+    if mixer == "mla":
+        return {"kv": mla_mod.init_mla_cache(cfg, batch, length)}
+    if mixer == "rglru":
+        return {"rec": rglru_mod.init_rglru_cache(cfg, batch)}
+    if mixer == "rwkv":
+        return rwkv_mod.init_rwkv_cache(cfg, batch)
+    raise ValueError(mixer)
+
+
+def apply_block_decode(x, p, cfg, block: Block, cache, pos):
+    mixer, ffn = block
+    h = apply_norm(x, p["norm1"], cfg)
+    if mixer in ("attn", "local"):
+        h, kv = attn.attention_decode(h, p["mixer"], cfg, cache["kv"], pos, mixer)
+        new_cache = {"kv": kv}
+    elif mixer == "mla":
+        h, kv = mla_mod.mla_decode(h, p["mixer"], cfg, cache["kv"], pos)
+        new_cache = {"kv": kv}
+    elif mixer == "rglru":
+        h, rec = rglru_mod.rglru_decode(h, p["mixer"], cfg, cache["rec"])
+        new_cache = {"rec": rec}
+    elif mixer == "rwkv":
+        h, tmix = rwkv_mod.rwkv_tmix(h, p["mixer"], cfg, state=cache["tmix"])
+        new_cache = {"tmix": tmix}
+    else:
+        raise ValueError(mixer)
+    x = x + h
+    h = apply_norm(x, p["norm2"], cfg)
+    if ffn == "mlp":
+        h = apply_mlp(h, p["ffn"], cfg)
+    elif ffn == "moe":
+        h, _ = moe_mod.apply_moe(h, p["ffn"], cfg)
+    elif ffn == "cmix":
+        h, cm = rwkv_mod.rwkv_cmix(h, p["ffn"], cfg, state=cache["cmix"])
+        new_cache["cmix"] = cm
+    return x + h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# whole-model init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key):
+    layout = decompose(cfg.blocks())
+    keys = jax.random.split(key, 8)
+    params: Dict = {}
+    if cfg.frontend is None or cfg.frontend == "patch":
+        params["embed"] = init_embed(keys[0], cfg)
+    if cfg.frontend is not None:
+        params["frontend_proj"] = {
+            "w": dense_init(keys[1], cfg.frontend_dim, cfg.d_model,
+                            cfg.param_dtype)}
+        if cfg.frontend == "frame":
+            params["pos_embed"] = (jax.random.normal(
+                keys[2], (cfg.max_position, cfg.d_model), jnp.float32)
+                * 0.02).astype(cfg.param_dtype)
+
+    def blocks_tree(key, blocks, stacked_reps=0):
+        if stacked_reps:
+            reps = []
+            for r in range(stacked_reps):
+                kr = jax.random.fold_in(key, r)
+                ks = jax.random.split(kr, len(blocks))
+                reps.append({str(i): init_block(ks[i], cfg, b)
+                             for i, b in enumerate(blocks)})
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+        ks = jax.random.split(key, max(1, len(blocks)))
+        return {str(i): init_block(ks[i], cfg, b)
+                for i, b in enumerate(blocks)}
+
+    if layout.prefix:
+        params["prefix"] = blocks_tree(keys[3], layout.prefix)
+    params["body"] = blocks_tree(keys[4], layout.unit, layout.reps)
+    if layout.suffix:
+        params["suffix"] = blocks_tree(keys[5], layout.suffix)
+    params["out_norm"] = init_norm(keys[6], cfg)
+    if not cfg.tie_embeddings:
+        params["head"] = {"w_out": dense_init(keys[7], cfg.d_model,
+                                              cfg.vocab_size, cfg.param_dtype)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, batch, cfg):
+    if cfg.frontend == "frame":
+        x = batch["frames"].astype(cfg.compute_dtype) \
+            @ params["frontend_proj"]["w"].astype(cfg.compute_dtype)
+        s = x.shape[1]
+        x = x + params["pos_embed"][:s].astype(cfg.compute_dtype)[None]
+        return x
+    if cfg.frontend == "patch":
+        px = batch["patches"].astype(cfg.compute_dtype) \
+            @ params["frontend_proj"]["w"].astype(cfg.compute_dtype)
+        tx = embed_tokens(batch["tokens"], params["embed"], cfg)
+        return jnp.concatenate([px, tx], axis=1)
+    return embed_tokens(batch["tokens"], params["embed"], cfg)
+
+
+def _remat(fn, cfg):
+    from repro.distributed.perf_options import enabled as perf_enabled
+    remat = "dots" if perf_enabled("remat_dots") else cfg.remat
+    if remat == "none":
+        return fn
+    if remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # full
+
+
+def forward(params, batch, cfg: ArchConfig):
+    """Returns (logits [B,S,V] fp32, aux scalar)."""
+    layout = decompose(cfg.blocks())
+    x = constrain(_embed_inputs(params, batch, cfg), "dp", "sp", None)
+    aux = jnp.zeros((), jnp.float32)
+
+    def run_blocks(x, aux, tree, blocks):
+        for i, b in enumerate(blocks):
+            x, aux = apply_block(x, tree[str(i)], cfg, b, aux)
+        return x, aux
+
+    if layout.prefix:
+        x, aux = run_blocks(x, aux, params["prefix"], layout.prefix)
+
+    def body(carry, unit_params):
+        x, aux = carry
+        x, aux = run_blocks(x, aux, unit_params, layout.unit)
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(_remat(body, cfg), (x, aux), params["body"])
+    if layout.suffix:
+        x, aux = run_blocks(x, aux, params["suffix"], layout.suffix)
+
+    x = apply_norm(x, params["out_norm"], cfg)
+    if cfg.frontend == "patch":  # logits only over text positions
+        n_patch = batch["patches"].shape[1]
+        x = x[:, n_patch:]
+    logits = constrain(
+        lm_logits(x, params.get("embed"), params.get("head"), cfg),
+        "dp", "sp", "tp")
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    logits, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    if not cfg.encoder_only:   # next-token prediction
+        logits = logits[:, :-1]
+        labels = labels[:, 1:]
+    valid = labels >= 0
+    labels_c = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels_c[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, nll, 0.0)
+    loss = nll.sum() / jnp.maximum(valid.sum(), 1)
+    total = loss + AUX_COEF * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, length: int):
+    layout = decompose(cfg.blocks())
+    cache: Dict = {}
+
+    def one(blocks):
+        return {str(i): init_block_cache(cfg, b, batch, length)
+                for i, b in enumerate(blocks)}
+
+    if layout.prefix:
+        cache["prefix"] = one(layout.prefix)
+    reps = [one(layout.unit) for _ in range(layout.reps)]
+    cache["body"] = jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+    if layout.suffix:
+        cache["suffix"] = one(layout.suffix)
+    return cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig, embeds=None):
+    """tokens [B,1]; pos scalar int32.  Returns (logits [B,1,V], new_cache).
+
+    ``embeds`` [B,1,d_model] overrides token embedding — used to prefill
+    VLM patch positions through the decode path (pixtral serving)."""
+    layout = decompose(cfg.blocks())
+    assert cfg.frontend != "frame", "encoder-only archs have no decode step"
+    if embeds is not None:
+        x = embeds.astype(cfg.compute_dtype)
+    else:
+        x = embed_tokens(tokens, params["embed"], cfg)
+    new_cache: Dict = {}
+
+    def run(x, tree, cache_tree, blocks):
+        nc = {}
+        for i, b in enumerate(blocks):
+            x, c = apply_block_decode(x, tree[str(i)], cfg, b,
+                                      cache_tree[str(i)], pos)
+            nc[str(i)] = c
+        return x, nc
+
+    if layout.prefix:
+        x, new_cache["prefix"] = run(x, params["prefix"], cache["prefix"],
+                                     layout.prefix)
+
+    def body(x, xs):
+        unit_params, unit_cache = xs
+        x, nc = run(x, unit_params, unit_cache, layout.unit)
+        return x, nc
+
+    x, new_cache["body"] = jax.lax.scan(body, x,
+                                        (params["body"], cache["body"]))
+    if layout.suffix:
+        x, new_cache["suffix"] = run(x, params["suffix"], cache["suffix"],
+                                     layout.suffix)
+    x = apply_norm(x, params["out_norm"], cfg)
+    logits = lm_logits(x, params.get("embed"), params.get("head"), cfg)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+def make_dummy_batch(cfg: ArchConfig, batch: int, seq: int, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.frontend == "frame":
+        return {
+            "frames": jax.random.normal(k1, (batch, seq, cfg.frontend_dim),
+                                        jnp.float32),
+            "labels": jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size),
+        }
+    if cfg.frontend == "patch":
+        n_patch = max(1, seq // cfg.patch_frac)
+        n_text = seq - n_patch
+        return {
+            "patches": jax.random.normal(k1, (batch, n_patch,
+                                              cfg.frontend_dim), jnp.float32),
+            "tokens": jax.random.randint(k2, (batch, n_text), 0,
+                                         cfg.vocab_size),
+            "labels": jax.random.randint(k3, (batch, n_text), 0,
+                                         cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size),
+    }

@@ -1,0 +1,116 @@
+"""RecurrentGemma recurrent block: conv1d + RG-LRU (Griffin, arXiv:2402.19427).
+
+RG-LRU:  r_t = σ(W_a x_t + b_a)      (recurrence gate)
+         i_t = σ(W_x x_t + b_x)      (input gate)
+         log a_t = -c · softplus(Λ) · r_t          (c = 8)
+         h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Train/prefill uses jax.lax.associative_scan over the diagonal recurrence
+(O(log S) depth — the TPU-native replacement for the paper-era CUDA scan);
+decode is a single fused step.  The Pallas ``lru_scan`` kernel implements the
+same recurrence with chunked VMEM-resident carries for the TPU hot path.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import constrain
+from repro.models.common import dense_init
+
+_C = 8.0
+
+
+def init_rglru(key, cfg):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    dt = cfg.param_dtype
+    return {
+        "w_x": dense_init(ks[0], d, w, dt),
+        "w_gate_branch": dense_init(ks[1], d, w, dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w), jnp.float32)
+                   / math.sqrt(cfg.conv_width)).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_a": dense_init(ks[3], w, w, dt),
+        "b_a": jnp.zeros((w,), dt),
+        "w_i": dense_init(ks[4], w, w, dt),
+        "b_i": jnp.zeros((w,), dt),
+        # Λ init so that a ∈ [0.9, 0.999] at r=1 (Griffin appendix)
+        "lam": jnp.asarray(
+            jnp.log(jnp.expm1(-jnp.log(
+                jnp.linspace(0.9, 0.999, w)) / _C)), jnp.float32),
+        "w_o": dense_init(ks[5], w, d, dt),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x [B,S,W]; depthwise causal conv of width K.  state [B,K-1,W]."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, : k - 1])
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, x.shape[1]:]
+    return out + b, new_state
+
+
+def _gates(xc, p, cfg):
+    r = jax.nn.sigmoid(xc @ p["w_a"].astype(cfg.compute_dtype)
+                       + p["b_a"].astype(cfg.compute_dtype))
+    i = jax.nn.sigmoid(xc @ p["w_i"].astype(cfg.compute_dtype)
+                       + p["b_i"].astype(cfg.compute_dtype))
+    log_a = (-_C * jax.nn.softplus(p["lam"])).astype(jnp.float32) \
+        * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xc).astype(jnp.float32)
+    return a, gated_x
+
+
+def rglru_forward(x, p, cfg, use_kernel: bool = False):
+    """x [B,S,d] -> (out [B,S,d], (h_last [B,W], conv_state))."""
+    cd = cfg.compute_dtype
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(cd), approximate=True)
+    xr = x @ p["w_x"].astype(cd)
+    xc, conv_state = _causal_conv(xr, p["conv_w"].astype(cd),
+                                  p["conv_b"].astype(cd))
+    xc = constrain(xc, "dp", None, "tp")
+    a, gx = _gates(xc, p, cfg)
+    if use_kernel:
+        from repro.kernels.lru_scan.ops import lru_scan
+        h = lru_scan(a, gx)
+    else:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+        _, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    h = h.astype(cd)
+    out = (h * gate) @ p["w_o"].astype(cd)
+    return out, (h[:, -1].astype(jnp.float32), conv_state)
+
+
+def init_rglru_cache(cfg, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), cfg.compute_dtype),
+    }
+
+
+def rglru_decode(x, p, cfg, cache):
+    """x [B,1,d] -> (out [B,1,d], new_cache).  O(1) per token."""
+    cd = cfg.compute_dtype
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(cd), approximate=True)
+    xr = x @ p["w_x"].astype(cd)
+    xc, conv_state = _causal_conv(xr, p["conv_w"].astype(cd),
+                                  p["conv_b"].astype(cd), state=cache["conv"])
+    a, gx = _gates(xc, p, cfg)
+    h = a[:, 0] * cache["h"] + gx[:, 0]
+    out = (h[:, None].astype(cd) * gate) @ p["w_o"].astype(cd)
+    return out, {"h": h, "conv": conv_state}

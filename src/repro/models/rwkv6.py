@@ -1,0 +1,189 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): data-dependent-decay linear attention.
+
+Time-mix recurrence per head (state S ∈ R^{dk×dv}):
+    out_t = r_t · (S_{t-1} + (u ⊙ k_t) v_tᵀ)
+    S_t   = diag(w_t) S_{t-1} + k_t v_tᵀ ,   w_t = exp(-exp(w0 + lora(x_t)))
+Token-shift (ddlerp) mixes x_t with x_{t-1} before every projection.
+
+Train/prefill uses a lax.scan over time (exact); the chunked-parallel form is
+a §Perf hillclimb (see EXPERIMENTS.md).  Decode carries (S, x_prev) — O(1)
+state, which is what makes the 500k-context cell runnable.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import constrain
+from repro.models.common import dense_init
+
+HEAD_SIZE = 64
+
+
+def _n_heads(cfg):
+    return cfg.d_model // HEAD_SIZE
+
+
+def init_rwkv_tmix(key, cfg):
+    ks = jax.random.split(key, 10)
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    lora = 32
+    return {
+        "mix_base": jnp.full((5, d), 0.5, dt),          # r,k,v,w,g lerp base
+        "w_r": dense_init(ks[0], d, d, dt),
+        "w_k": dense_init(ks[1], d, d, dt),
+        "w_v": dense_init(ks[2], d, d, dt),
+        "w_g": dense_init(ks[3], d, d, dt),
+        "w0": (jax.random.normal(ks[4], (d,), jnp.float32) * 0.3 - 6.0),
+        "w_lora_a": dense_init(ks[5], d, lora, dt),
+        "w_lora_b": dense_init(ks[6], lora, d, dt),
+        "u": (jax.random.normal(ks[7], (d,), jnp.float32) * 0.3),
+        "gn_scale": jnp.ones((d,), dt),
+        "w_o": dense_init(ks[8], d, d, dt),
+    }
+
+
+def init_rwkv_cmix(key, cfg):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    return {
+        "mix_base": jnp.full((2, d), 0.5, dt),
+        "w_k": dense_init(ks[0], d, cfg.d_ff, dt),
+        "w_v": dense_init(ks[1], cfg.d_ff, d, dt),
+        "w_r": dense_init(ks[2], d, d, dt),
+    }
+
+
+def _shift(x, prev=None):
+    """x_{t-1} along seq; ``prev`` [B,1,d] carries across decode steps."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """Exact recurrence.  r,k,v,w: [B,S,H,D]; u [H,D]; s0 [B,H,D,D]."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        att = s + jnp.einsum("bhk,bhv->bhkv", u[None] * kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, att)
+        s = s * wt[..., None] + jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        return s, out
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s_last, outs = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(outs, 0, 1), s_last
+
+
+def _wkv_chunked(r, k, v, w, u, s0, chunk: int = 16):
+    """Chunk-parallel WKV (beyond-paper §Perf): O(S/C) sequential steps of
+    C×C / C×D matmuls instead of S outer-product steps.
+
+    Within a chunk (cs = inclusive cumsum of log w):
+        A[t,s]   = Σ_d r_t[d] k_s[d] exp(cs_{t-1}[d] - cs_s[d])   (s < t)
+        out_t    = (r_t ⊙ exp(cs_{t-1})) @ S_in  +  Σ_{s<t} A[t,s] v_s
+                   + (r_t · (u ⊙ k_t)) v_t
+        S_out    = diag(exp(cs_C)) S_in + Σ_s (k_s ⊙ exp(cs_C - cs_s)) v_sᵀ
+    Every exponent is ≤ 0 (decays ≤ 1), so the chunked form is
+    overflow-safe without rescaling tricks.
+    """
+    b, S, h, d = r.shape
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    nc = S // c
+
+    def blk(t):
+        return t.reshape(b, nc, c, h, d).transpose(1, 0, 3, 2, 4)  # [nc,b,h,c,d]
+
+    rb, kb, vb, wb = blk(r), blk(k), blk(v), blk(w)
+    lw = jnp.log(jnp.maximum(wb, 1e-38))
+    cs = jnp.cumsum(lw, axis=3)                       # inclusive [nc,b,h,c,d]
+    cs_prev = cs - lw                                 # exclusive
+    cs_end = cs[:, :, :, -1:, :]
+
+    q1 = rb * jnp.exp(cs_prev)                        # decay-to-chunk-start q
+    k_end = kb * jnp.exp(cs_end - cs)                 # decay-to-chunk-end k
+    # intra-chunk attention matrix, strictly causal
+    diff = cs_prev[:, :, :, :, None, :] - cs[:, :, :, None, :, :]  # [.,c,c,d]
+    mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])
+    a = jnp.einsum("nbhtd,nbhsd,nbhtsd->nbhts", rb, kb,
+                   jnp.exp(jnp.where(mask[None, None, None, ..., None],
+                                     diff, -jnp.inf)))
+    bonus = jnp.einsum("nbhtd,nbhtd->nbht", rb,
+                       u[None, None, :, None, :] * kb)
+
+    def step(s_carry, inp):
+        q1c, kec, vc, ac, bc, cs_e = inp
+        inter = jnp.einsum("bhtd,bhdv->bhtv", q1c, s_carry)
+        intra = jnp.einsum("bhts,bhsv->bhtv", ac, vc)
+        out = inter + intra + bc[..., None] * vc
+        decay = jnp.exp(cs_e[:, :, 0, :, None])          # [b,h,d,1]
+        s_new = s_carry * decay \
+            + jnp.einsum("bhsd,bhsv->bhdv", kec, vc)
+        return s_new, out
+
+    s_last, outs = jax.lax.scan(
+        step, s0, (q1, k_end, vb, a, bonus, cs_end))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, S, h, d)
+    return out, s_last
+
+
+def rwkv_tmix(x, p, cfg, state=None, use_kernel: bool = False):
+    """x [B,S,d] -> (out, (S_state [B,H,D,D] fp32, x_last [B,1,d]))."""
+    b, s, d = x.shape
+    h = _n_heads(cfg)
+    cd = cfg.compute_dtype
+    xp = _shift(x, None if state is None else state["x_prev"])
+    mix = p["mix_base"].astype(cd)
+    xr, xk, xv, xw, xg = [x * mix[i] + xp * (1 - mix[i]) for i in range(5)]
+
+    r = constrain((xr @ p["w_r"].astype(cd)).reshape(b, s, h, HEAD_SIZE),
+                  "dp", None, "tp", None)
+    k = constrain((xk @ p["w_k"].astype(cd)).reshape(b, s, h, HEAD_SIZE),
+                  "dp", None, "tp", None)
+    v = constrain((xv @ p["w_v"].astype(cd)).reshape(b, s, h, HEAD_SIZE),
+                  "dp", None, "tp", None)
+    g = jax.nn.silu(xg @ p["w_g"].astype(cd))
+    dd = p["w0"] + ((xw @ p["w_lora_a"].astype(cd)).astype(jnp.float32)
+                    @ p["w_lora_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(dd)).reshape(b, s, h, HEAD_SIZE)      # decay in (0,1)
+    u = p["u"].reshape(h, HEAD_SIZE)
+
+    s0 = (jnp.zeros((b, h, HEAD_SIZE, HEAD_SIZE), jnp.float32)
+          if state is None else state["s"])
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    from repro.distributed.perf_options import enabled as perf_enabled
+    if perf_enabled("rwkv_chunked") and state is None and s % 16 == 0:
+        out, s_last = _wkv_chunked(rf, kf, vf, wf, u, s0)
+    else:
+        out, s_last = _wkv_scan(rf, kf, vf, wf, u, s0)
+    out = out.reshape(b, s, d).astype(cd)
+    # group-norm per head (RWKV's ln_x), folded to a simple RMS over head dim
+    og = out.reshape(b, s, h, HEAD_SIZE).astype(jnp.float32)
+    og = og * jax.lax.rsqrt(jnp.mean(og * og, axis=-1, keepdims=True) + 1e-5)
+    out = (og.reshape(b, s, d) * p["gn_scale"].astype(jnp.float32)).astype(cd)
+    out = (out * g) @ p["w_o"].astype(cd)
+    return out, {"s": s_last, "x_prev": x[:, -1:]}
+
+
+def rwkv_cmix(x, p, cfg, state=None):
+    cd = cfg.compute_dtype
+    xp = _shift(x, None if state is None else state["x_prev"])
+    mix = p["mix_base"].astype(cd)
+    xk = x * mix[0] + xp * (1 - mix[0])
+    xr = x * mix[1] + xp * (1 - mix[1])
+    kk = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(cd)))
+    out = jax.nn.sigmoid(xr @ p["w_r"].astype(cd)) * (kk @ p["w_v"].astype(cd))
+    return out, {"x_prev": x[:, -1:]}
+
+
+def init_rwkv_cache(cfg, batch: int):
+    h = _n_heads(cfg)
+    return {
+        "tmix": {"s": jnp.zeros((batch, h, HEAD_SIZE, HEAD_SIZE), jnp.float32),
+                 "x_prev": jnp.zeros((batch, 1, cfg.d_model), cfg.compute_dtype)},
+        "cmix": {"x_prev": jnp.zeros((batch, 1, cfg.d_model), cfg.compute_dtype)},
+    }

@@ -1,0 +1,35 @@
+"""train_step / serve_step factories — the units the dry-run lowers."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as model_lib
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig = AdamWConfig()):
+    def train_step(params, opt_state, batch):
+        (total, metrics), grads = jax.value_and_grad(
+            model_lib.loss_fn, has_aux=True)(params, batch, cfg)
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params,
+                                                opt_cfg)
+        metrics = dict(metrics, total=total, grad_norm=gnorm)
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model_lib.decode_step(params, cache, tokens, pos, cfg)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return serve_step
+
+
+def init_train_state(cfg: ArchConfig, key):
+    params = model_lib.init_params(cfg, key)
+    return params, init_opt_state(params)

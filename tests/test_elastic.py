@@ -1,0 +1,73 @@
+"""Elastic restart: checkpoint written under one mesh size must restore and
+keep training under another (the 256→512-chip scenario, scaled down)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os, sys
+    n_dev, phase, ckpt = sys.argv[1], sys.argv[2], sys.argv[3]
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    import warnings; warnings.filterwarnings("ignore")
+    import json
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.configs.base import get_arch
+    from repro.models import model as M
+    from repro.train.optimizer import init_opt_state
+    from repro.train.step import make_train_step
+    from repro.train.loop import data_stream
+    from repro.distributed.checkpoint import (restore_checkpoint,
+                                              save_checkpoint)
+
+    cfg = get_arch("olmo_1b").reduced()
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    start = 0
+    if phase == "resume":
+        shard = jax.tree.map(
+            lambda a: NamedSharding(mesh, P()), {"params": params, "opt": opt})
+        start, state = restore_checkpoint(ckpt, {"params": params, "opt": opt},
+                                          shardings=shard)
+        params, opt = state["params"], state["opt"]
+    step = jax.jit(make_train_step(cfg))
+    stream = data_stream(cfg, 8, 32)
+    for _ in range(start):
+        next(stream)
+    loss = None
+    end = 6 if phase == "start" else 12
+    for i in range(start, end):
+        params, opt, metrics = step(params, opt, next(stream))
+        loss = float(metrics["loss"])
+    if phase == "start":
+        save_checkpoint(ckpt, end, {"params": params, "opt": opt})
+    print("RESULT" + json.dumps({"devices": int(n_dev), "loss": loss}))
+""")
+
+
+def _run(n_dev, phase, ckpt):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", SCRIPT, str(n_dev), phase,
+                           ckpt], env=env, capture_output=True, text=True,
+                          timeout=600,
+                          cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    return json.loads(line[len("RESULT"):])
+
+
+def test_elastic_restart_4_to_8_devices(tmp_path):
+    ckpt = str(tmp_path / "ck")
+    _run(4, "start", ckpt)                       # train 6 steps on 4 devices
+    r8 = _run(8, "resume", ckpt)                 # resume on 8 devices
+    r4 = _run(4, "resume", ckpt)                 # resume on 4 (control)
+    assert r8["loss"] < 5.5 and r4["loss"] < 5.5
+    # same data, same state => same trajectory regardless of device count
+    assert abs(r8["loss"] - r4["loss"]) < 5e-3, (r8, r4)

@@ -1,0 +1,104 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fct_count import ref as fct_ref
+from repro.kernels.fct_count.ops import weighted_histogram
+from repro.kernels.flash_attention import ref as flash_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.lru_scan import ref as lru_ref
+from repro.kernels.lru_scan.ops import lru_scan
+
+RNG = np.random.default_rng(0)
+
+
+# --- fct_count ---------------------------------------------------------------
+
+@pytest.mark.parametrize("n,l,vocab", [
+    (128, 8, 512), (300, 5, 100), (1024, 16, 4096), (7, 3, 33), (1, 1, 2),
+])
+@pytest.mark.parametrize("wdtype", [jnp.int32, jnp.float32])
+def test_fct_count_matches_ref(n, l, vocab, wdtype):
+    toks = jnp.asarray(RNG.integers(0, vocab, (n, l)), jnp.int32)
+    w = jnp.asarray(RNG.integers(0, 9, (n,))).astype(wdtype)
+    r = fct_ref.weighted_histogram(toks, w, vocab)
+    k = weighted_histogram(toks, w, vocab, backend="interpret")
+    np.testing.assert_allclose(np.asarray(r, np.float64),
+                               np.asarray(k, np.float64), rtol=1e-6)
+
+
+def test_fct_count_pad_never_counted():
+    toks = jnp.zeros((16, 4), jnp.int32)  # all PAD
+    w = jnp.ones((16,), jnp.int32)
+    out = weighted_histogram(toks, w, 64, backend="interpret")
+    assert int(jnp.sum(jnp.abs(out))) == 0
+
+
+# --- flash attention ---------------------------------------------------------
+
+def naive_attention(q, k, v, causal, window):
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qq = q.reshape(b, sq, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qq,
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None]
+    m = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window:
+        m &= (qpos - kpos) < window
+    s = jnp.where(m[None, None, None], s, -2e38)
+    w = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, v.shape[-1])
+
+
+@pytest.mark.parametrize("b,s,h,hkv,d,dv,causal,window", [
+    (2, 128, 4, 2, 32, 32, True, None),    # GQA causal
+    (1, 200, 6, 1, 16, 16, True, 64),      # MQA + local window, ragged S
+    (2, 96, 4, 4, 32, 16, False, None),    # encoder, dv != d (MLA shape)
+    (1, 64, 2, 2, 128, 128, True, None),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_naive(b, s, h, hkv, d, dv, causal, window, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, s, h, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, s, hkv, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, s, hkv, dv)), dtype)
+    tol = 2e-5 if dtype == jnp.float32 else 4e-2
+    ref_o = np.asarray(naive_attention(q, k, v, causal, window), np.float32)
+    for backend in ("ref", "interpret"):
+        got = flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=32, backend=backend)
+        np.testing.assert_allclose(np.asarray(got, np.float32), ref_o,
+                                   atol=tol, rtol=tol)
+
+
+# --- lru_scan ----------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,w", [(2, 64, 32), (1, 300, 700), (3, 17, 5)])
+def test_lru_scan_matches_ref(b, s, w):
+    a = jnp.asarray(RNG.uniform(0.8, 1.0, (b, s, w)), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(b, s, w)), jnp.float32)
+    r = lru_ref.lru_scan(a, x)
+    k = lru_scan(a, x, backend="interpret")
+    np.testing.assert_allclose(np.asarray(r), np.asarray(k),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lru_scan_matches_sequential():
+    a = jnp.asarray(RNG.uniform(0.5, 1.0, (1, 37, 3)), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(1, 37, 3)), jnp.float32)
+    h = np.zeros((3,), np.float32)
+    seq = []
+    for t in range(37):
+        h = np.asarray(a)[0, t] * h + np.asarray(x)[0, t]
+        seq.append(h.copy())
+    np.testing.assert_allclose(np.asarray(lru_ref.lru_scan(a, x))[0],
+                               np.stack(seq), rtol=2e-5, atol=2e-5)

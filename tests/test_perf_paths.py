@@ -1,0 +1,113 @@
+"""The §Perf optimization paths must be numerically equivalent to the
+baselines they replace (hillclimbs may not change semantics)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import dataclasses
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_arch
+from repro.distributed.perf_options import KNOWN, perf_options, enabled
+from repro.models.rwkv6 import _wkv_chunked, _wkv_scan
+
+
+def test_perf_options_scoping():
+    assert not enabled("bf16_flash")
+    with perf_options("bf16_flash", "remat_dots"):
+        assert enabled("bf16_flash") and enabled("remat_dots")
+        assert not enabled("moe_shardmap")
+    assert not enabled("bf16_flash")
+    with pytest.raises(AssertionError):
+        with perf_options("not_a_real_option"):
+            pass
+
+
+@pytest.mark.parametrize("shape,chunk", [((2, 64, 3, 8), 16),
+                                         ((1, 128, 2, 16), 32)])
+def test_wkv_chunked_matches_scan(shape, chunk):
+    rng = np.random.default_rng(0)
+    b, S, h, d = shape
+    r, k, v = (jnp.asarray(rng.normal(size=shape), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.7, 0.999, shape), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(h, d)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(b, h, d, d)), jnp.float32) * 0.1
+    o1, sl1 = _wkv_scan(r, k, v, w, u, s0)
+    o2, sl2 = _wkv_chunked(r, k, v, w, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(sl1), np.asarray(sl2),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_moe_shardmap_matches_gspmd_single_device():
+    from jax.sharding import Mesh
+    from repro.models import model as M, moe as moe_mod
+    from repro.distributed import act_sharding
+
+    cfg = dataclasses.replace(get_arch("deepseek_moe_16b").reduced(),
+                              capacity_factor=16.0)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    p0 = jax.tree.map(lambda a: a[0], params["body"]["1"]["ffn"])
+    y_ref, aux_ref = moe_mod.apply_moe(x, p0, cfg)
+    mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+    with act_sharding.activation_sharding(mesh, ("data",), "model"), \
+            perf_options("moe_shardmap"):
+        y_sm, aux_sm = jax.jit(lambda x, p: moe_mod.apply_moe(x, p, cfg))(x, p0)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_sm),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(float(aux_ref), float(aux_sm), rtol=1e-5)
+
+
+MULTI_RANK = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import warnings; warnings.filterwarnings("ignore")
+    import dataclasses, json
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.configs.base import get_arch
+    from repro.models import model as M, moe as moe_mod
+    from repro.distributed import act_sharding
+    from repro.distributed.perf_options import perf_options
+
+    cfg = dataclasses.replace(get_arch("deepseek_moe_16b").reduced(),
+                              capacity_factor=16.0)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model),
+                          jnp.float32)
+    p0 = jax.tree.map(lambda a: a[0], params["body"]["1"]["ffn"])
+    y_ref, aux_ref = moe_mod.apply_moe(x, p0, cfg)
+    # 2 data x 4 model ranks: experts sharded 8/4=2 per rank
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    with act_sharding.activation_sharding(mesh, ("data",), "model"), \\
+            perf_options("moe_shardmap"):
+        y_sm, aux_sm = jax.jit(lambda x, p: moe_mod.apply_moe(x, p, cfg))(x, p0)
+    err = float(jnp.max(jnp.abs(y_ref - y_sm)))
+    print("RESULT" + json.dumps({"err": err,
+                                 "aux_ref": float(aux_ref),
+                                 "aux_sm": float(aux_sm)}))
+""")
+
+
+def test_moe_shardmap_matches_gspmd_on_8_ranks():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", MULTI_RANK], env=env,
+                          capture_output=True, text=True, timeout=600,
+                          cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    rec = json.loads(line[len("RESULT"):])
+    assert rec["err"] < 2e-4, rec
+    assert abs(rec["aux_ref"] - rec["aux_sm"]) < 1e-4, rec

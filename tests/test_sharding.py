@@ -1,0 +1,78 @@
+"""Sharding rules: spec trees mirror param/cache trees; divisibility fallback."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, get_arch
+from repro.distributed import sharding as sh
+from repro.models import model as M
+
+
+def fake_mesh(shape=(2, 2), axes=("data", "model")):
+    n = int(np.prod(shape))
+    devs = np.array([jax.devices()[0]] * n).reshape(shape)
+    return Mesh(devs, axes)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_param_specs_tree_matches_params(arch_id):
+    cfg = get_arch(arch_id)  # FULL config, abstract init only
+    rules = sh.ShardingRules()
+    pshapes = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = sh.param_specs(cfg, rules)
+    # identical tree structure (spec leaves are PartitionSpec)
+    jax.tree.map(lambda a, s: None, pshapes, specs,
+                 is_leaf=lambda x: isinstance(x, P))
+    mesh = fake_mesh()
+    shard = sh.to_shardings(specs, pshapes, mesh)
+    # every sharded dim divides
+    def check(aval, s):
+        spec = s.spec
+        for d, ax in enumerate(tuple(spec)[:len(aval.shape)]):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert aval.shape[d] % size == 0
+    jax.tree.map(check, pshapes, shard)
+
+
+@pytest.mark.parametrize("arch_id", ["gemma_7b", "deepseek_v2_236b",
+                                     "recurrentgemma_2b", "rwkv6_1b6"])
+def test_cache_specs_tree_matches_cache(arch_id):
+    cfg = get_arch(arch_id)
+    rules = sh.ShardingRules()
+    cshapes = jax.eval_shape(lambda: M.init_cache(cfg, 8, 128))
+    specs = sh.cache_specs(cfg, rules)
+    jax.tree.map(lambda a, s: None, cshapes, specs,
+                 is_leaf=lambda x: isinstance(x, P))
+
+
+def test_sanitize_non_divisible_falls_back():
+    mesh = fake_mesh((2, 16), ("data", "model"))
+    # 15 heads on a 16-way model axis -> replicated
+    spec = sh.sanitize(P(None, "model", None), (960, 15, 64), mesh)
+    assert spec == P(None, None, None)
+    # divisible stays
+    spec = sh.sanitize(P("data", "model"), (64, 32), mesh)
+    assert spec == P("data", "model")
+    # repeated axis dropped
+    spec = sh.sanitize(P("model", "model"), (32, 32), mesh)
+    assert spec == P("model", None)
+
+
+def test_batch_specs_cover_all_modalities():
+    rules = sh.ShardingRules(dp=("pod", "data"))
+    for arch_id in ("gemma_7b", "pixtral_12b", "hubert_xlarge"):
+        cfg = get_arch(arch_id)
+        specs = sh.batch_specs(cfg, rules)
+        assert all(isinstance(v, P) for v in specs.values())
+        if cfg.frontend == "patch":
+            assert set(specs) == {"patches", "tokens", "labels"}
+        elif cfg.frontend == "frame":
+            assert set(specs) == {"frames", "labels"}
+        else:
+            assert set(specs) == {"tokens", "labels"}

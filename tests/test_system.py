@@ -1,0 +1,61 @@
+"""End-to-end behaviour of the FCT system (paper Def. 6 semantics)."""
+import numpy as np
+import pytest
+
+from repro.core.fct import run_fct_query
+from repro.core.star import fct_bruteforce, fct_star, topk_terms
+from repro.data.tpch import TpchConfig, generate, plant_keywords
+from repro.data.schema import PAD_ID
+
+
+def small_schema(skew=0.0, seed=5):
+    cfg = TpchConfig(fact_rows=300, part_rows=40, supp_rows=24, order_rows=32,
+                     text_len=6, vocab_size=128, seed=seed, skew=skew)
+    schema = generate(cfg)
+    kws = [100, 101, 102]
+    schema = plant_keywords(schema, {"PART": [100], "SUPPLIER": [101],
+                                     "ORDERS": [102], "LINEITEM": [100, 102]},
+                            frac=0.35)
+    return schema, kws
+
+
+def test_star_method_equals_bruteforce():
+    schema, kws = small_schema()
+    for r_max in (1, 2, 3, 4):
+        bf = fct_bruteforce(schema, kws, r_max)
+        st = fct_star(schema, kws, r_max)
+        np.testing.assert_array_equal(bf, st)
+
+
+def test_distributed_engine_equals_star_oracle():
+    schema, kws = small_schema()
+    oracle = fct_star(schema, kws, 4)
+    res = run_fct_query(schema, kws, r_max=4)
+    np.testing.assert_array_equal(res.all_freqs, oracle)
+
+
+def test_topk_excludes_query_terms_and_pad():
+    schema, kws = small_schema()
+    freq = fct_star(schema, kws, 4)
+    ids, f = topk_terms(freq, kws, 10)
+    assert PAD_ID not in ids[f > 0]
+    for kw in kws:
+        assert kw not in ids[f > 0]
+    assert all(f[i] >= f[i + 1] for i in range(len(f) - 1))
+
+
+def test_skew_mode_matches_uniform_results():
+    schema, kws = small_schema(skew=1.0)
+    base = run_fct_query(schema, kws, r_max=3, mode="uniform").all_freqs
+    for mode in ("skew", "round_robin"):
+        got = run_fct_query(schema, kws, r_max=3, mode=mode, rho=4).all_freqs
+        np.testing.assert_array_equal(base, got)
+
+
+def test_result_reports_shuffle_stats():
+    schema, kws = small_schema()
+    res = run_fct_query(schema, kws, r_max=3)
+    assert res.n_joined_cns >= 1
+    assert res.shuffle_rows > 0
+    assert res.shuffle_bytes > 0
+    assert res.imbalance >= 1.0
