@@ -20,8 +20,14 @@ def timed(fn, warmup: int = 1, iters: int = 3) -> float:
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
-def emit(name: str, us: float, derived: str = "") -> None:
+RECORDS: list = []  # every emit() lands here; run.py --json serializes them
+
+
+def emit(name: str, us: float, derived: str = "", **extra) -> None:
     print(f"{name},{us:.1f},{derived}")
+    rec = {"name": name, "us_per_call": round(us, 1), "derived": derived}
+    rec.update(extra)
+    RECORDS.append(rec)
 
 
 def make_dataset(scale: float = 1.0, skew: float = 0.0, seed: int = 5,

@@ -57,9 +57,10 @@ def _route(text, keys, send):
             rmask.reshape(flat))
 
 
-def _device_fct(fact, dims, *, domains: Tuple[int, ...], vocab: int,
-                histogram_backend: str):
-    """One worker's MR¹+MR² for one CN.  All inputs are this device's shard."""
+def _device_fct_local(fact, dims, *, domains: Tuple[int, ...], vocab: int,
+                      histogram_backend: str):
+    """One worker's MR¹+MR² for one CN, WITHOUT the final cross-worker psum
+    (the runtime engine vmaps this over a batch of CNs and psums once)."""
     ftext, fkeys, fmask = _route(fact["text"], fact["keys"], fact["send"])
     routed_dims = [
         _route(d["text"], d["keys"], d["send"]) for d in dims
@@ -96,6 +97,14 @@ def _device_fct(fact, dims, *, domains: Tuple[int, ...], vocab: int,
     for (dtext, dkeys, dmask), w in zip(routed_dims, dim_vols):
         hist = hist + weighted_histogram(dtext, w.astype(hist.dtype), vocab,
                                          backend=histogram_backend)
+    return hist
+
+
+def _device_fct(fact, dims, *, domains: Tuple[int, ...], vocab: int,
+                histogram_backend: str):
+    """One worker's MR¹+MR² for one CN.  All inputs are this device's shard."""
+    hist = _device_fct_local(fact, dims, domains=domains, vocab=vocab,
+                             histogram_backend=histogram_backend)
     return lax.psum(hist, "w")
 
 
@@ -185,32 +194,47 @@ def _device_job2(vol_arrays, *, vocab, histogram_backend):
 
 def run_cn_plan_two_jobs(plan: CNPlan, mesh: Mesh,
                          histogram_backend: str = "auto",
-                         checkpoint_dir: Optional[str] = None) -> np.ndarray:
-    """MR1 -> (optional host checkpoint) -> MR2, matching the fused path."""
-    fact, dims = _plan_to_arrays(plan)
-    domains = tuple(plan.key_domains[i] for i in plan.included)
+                         checkpoint_dir: Optional[str] = None,
+                         cache=None) -> np.ndarray:
+    """MR1 -> (optional host checkpoint) -> MR2, matching the fused path.
+
+    Both jobs' executables live in the runtime's shared compile cache (keyed
+    by the plan's bucketed shape signature), so repeated plans re-jit nothing.
+    """
+    from repro.runtime.batch import pad_plan_arrays, plan_signature
+    from repro.runtime.cache import default_cache
+    if cache is None:
+        cache = default_cache()
+    sig = plan_signature(plan)
+    fact, dims = pad_plan_arrays(plan, sig)
+    domains = tuple(d.domain for d in sig.dims)
+    m = sig.m
     shard = P("w")
     specs_rel = {"text": shard, "keys": shard, "send": shard}
     vol_spec = {"fact": {"text": shard, "vol": shard},
-                "dims": [{"text": shard, "vol": shard}] * len(dims)}
-    job1 = shard_map(
-        lambda f, ds: _device_job1(
-            {k: jnp.squeeze(v, 0) for k, v in f.items()},
-            [{k: jnp.squeeze(v, 0) for k, v in d.items()} for d in ds],
-            domains=domains),
-        mesh=mesh, in_specs=(specs_rel, [specs_rel] * len(dims)),
-        out_specs=vol_spec, check_rep=False)
-    vol_arrays = jax.jit(job1)(fact, dims)
+                "dims": [{"text": shard, "vol": shard}] * m}
+    job1 = cache.get_or_build(
+        ("fct_job1", sig, mesh),
+        lambda: shard_map(
+            lambda f, ds: _device_job1(
+                {k: jnp.squeeze(v, 0) for k, v in f.items()},
+                [{k: jnp.squeeze(v, 0) for k, v in d.items()} for d in ds],
+                domains=domains),
+            mesh=mesh, in_specs=(specs_rel, [specs_rel] * m),
+            out_specs=vol_spec, check_rep=False))
+    vol_arrays = job1(fact, dims)
     if checkpoint_dir is not None:  # the MR boundary the paper spills to DFS
         from repro.distributed.checkpoint import (restore_checkpoint,
                                                   save_checkpoint)
         save_checkpoint(checkpoint_dir, 1, vol_arrays)
         _, vol_arrays = restore_checkpoint(checkpoint_dir, vol_arrays)
-    job2 = shard_map(
-        lambda va: _device_job2(va, vocab=plan.vocab_size,
-                                histogram_backend=histogram_backend),
-        mesh=mesh, in_specs=(vol_spec,), out_specs=P(), check_rep=False)
-    freq = jax.jit(job2)(vol_arrays)
+    job2 = cache.get_or_build(
+        ("fct_job2", sig, histogram_backend, mesh),
+        lambda: shard_map(
+            lambda va: _device_job2(va, vocab=plan.vocab_size,
+                                    histogram_backend=histogram_backend),
+            mesh=mesh, in_specs=(vol_spec,), out_specs=P(), check_rep=False))
+    freq = job2(vol_arrays)
     return np.asarray(freq, np.int64)
 
 
@@ -242,17 +266,28 @@ def run_fct_query(schema: StarSchema, keywords: Sequence[int], *,
                   sample_frac: float = 1.0, salt: int = 0,
                   mesh: Optional[Mesh] = None,
                   stop_mask: Optional[np.ndarray] = None,
-                  histogram_backend: str = "auto") -> FCTResult:
-    """End-to-end FCT query (Def. 6) over the device mesh."""
+                  histogram_backend: str = "auto",
+                  engine=None) -> FCTResult:
+    """End-to-end FCT query (Def. 6) over the device mesh.
+
+    Joined CNs execute through the runtime engine (repro/runtime): plans are
+    shape-bucketed, same-signature CNs batch into one device program, and the
+    compiled executables are cached so warm queries never retrace.  Pass an
+    explicit ``engine`` to isolate (or share) a cache; the default is the
+    process-wide engine.
+    """
     if mesh is None:
         devs = np.array(jax.devices())
         mesh = Mesh(devs, ("w",))
     n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    if engine is None:
+        from repro.runtime.engine import default_engine
+        engine = default_engine()
 
     ts = TupleSets.build(schema, keywords)
     cns = prune_empty_cns(enumerate_star_cns(len(keywords), schema.m, r_max), ts)
     freq = np.zeros((schema.vocab_size,), np.int64)
-    n_joined = 0
+    plans: List[CNPlan] = []
     shuffle_rows = shuffle_bytes = 0
     imbalance, dominant_cost = 1.0, -1.0
     for cn in cns:
@@ -269,14 +304,16 @@ def run_fct_query(schema: StarSchema, keywords: Sequence[int], *,
             freq += tokens_histogram(
                 text, np.ones(text.shape[0], np.int64), schema.vocab_size)
             continue
-        n_joined += 1
+        plans.append(plan)
         shuffle_rows += plan.shuffle_rows
         shuffle_bytes += plan.shuffle_bytes
         # report balance of the dominant (most expensive) CN, not of tiny ones
         total = float(plan.schedule.device_cost.sum())
         if total > dominant_cost:
             dominant_cost, imbalance = total, plan.schedule.imbalance
-        freq += run_cn_plan(plan, mesh, histogram_backend)
+    n_joined = len(plans)
+    if plans:
+        freq += engine.run_plans(plans, mesh, histogram_backend)
     freq[PAD_ID] = 0
     ids, f = topk_terms(freq, keywords, k_terms, stop_mask)
     return FCTResult(term_ids=ids, freqs=f, all_freqs=freq,

@@ -41,6 +41,11 @@ class TaskGrid:
             task = task * a + coords[:, i]
         return task
 
+    def axis_coords(self, axis: int) -> np.ndarray:
+        """Coordinate along ``axis`` of every task id (row-major layout)."""
+        stride = int(np.prod(self.shares[axis + 1:], dtype=np.int64))
+        return (np.arange(self.n_tasks) // stride) % self.shares[axis]
+
     def tasks_with_coord(self, axis: int, value: int) -> np.ndarray:
         """All task ids whose ``axis`` coordinate equals ``value``."""
         grids = np.meshgrid(

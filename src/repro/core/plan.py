@@ -173,21 +173,26 @@ def build_cn_plan(schema: StarSchema, ts: TupleSets, cn: StarCN,
         r = np.arange(len(rows_i))
         src_d = (r // S_d).astype(np.int32)
         local_d = (r % S_d).astype(np.int32)
-        pair_src, pair_dst, pair_loc = [], [], []
-        for b in range(grid.shares[p]):
-            owners = t2d[grid.tasks_with_coord(p, b)]
-            owners = np.unique(owners[owners >= 0])  # Cor. 2: dedup per device
-            sel = dim_buckets[i] == b
-            if owners.size == 0 or not sel.any():
-                continue
-            rs, ls = src_d[sel], local_d[sel]
-            pair_src.append(np.repeat(rs, owners.size))
-            pair_loc.append(np.repeat(ls, owners.size))
-            pair_dst.append(np.tile(owners.astype(np.int32), rs.size))
-        if pair_src:
-            table_d, sent_d = _send_table(np.concatenate(pair_src),
-                                          np.concatenate(pair_dst),
-                                          np.concatenate(pair_loc), P)
+        # owners per bucket (Cor. 2: dedup per device) via one group-by over
+        # (bucket coord, device) pairs instead of a python loop over buckets
+        coord_p = grid.axis_coords(p)
+        live = t2d >= 0
+        owner_pairs = np.unique(coord_p[live].astype(np.int64) * P + t2d[live])
+        owner_bucket = owner_pairs // P
+        owner_dev = (owner_pairs % P).astype(np.int32)
+        n_owners = np.bincount(owner_bucket, minlength=grid.shares[p])
+        owner_start = np.cumsum(n_owners) - n_owners
+        # expand rows x owners-of-their-bucket with repeat/cumsum arithmetic
+        per_row = n_owners[dim_buckets[i]]
+        n_pairs = int(per_row.sum())
+        if n_pairs:
+            pair_src = np.repeat(src_d, per_row)
+            pair_loc = np.repeat(local_d, per_row)
+            row_start = np.cumsum(per_row) - per_row
+            within = np.arange(n_pairs) - np.repeat(row_start, per_row)
+            pair_dst = owner_dev[
+                np.repeat(owner_start[dim_buckets[i]], per_row) + within]
+            table_d, sent_d = _send_table(pair_src, pair_dst, pair_loc, P)
         else:
             table_d, sent_d = np.full((P, P, 1), -1, np.int32), 0
         dims[i] = RelationRoute(text=dtext_sh.astype(np.int32),

@@ -39,7 +39,9 @@ def _fct_count_kernel(tokens_ref, weights_ref, hist_ref, *, vocab_block: int):
         hist_ref[...] = jnp.zeros_like(hist_ref)
 
     tok = tokens_ref[...].reshape(nb * l)
-    w = jnp.repeat(weights_ref[...], l).astype(jnp.float32)
+    # broadcast-reshape, not jnp.repeat: no materialized gather on the VPU
+    w = jnp.broadcast_to(weights_ref[...][:, None], (nb, l))
+    w = w.reshape(nb * l).astype(jnp.float32)
     w = jnp.where(tok == PAD_ID, 0.0, w)
     vocab_ids = v0 + jax.lax.broadcasted_iota(jnp.int32, (nb * l, vocab_block), 1)
     onehot = (tok[:, None] == vocab_ids).astype(jnp.float32)

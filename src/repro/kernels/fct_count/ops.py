@@ -37,15 +37,24 @@ def weighted_histogram(tokens: jnp.ndarray, weights: jnp.ndarray, vocab: int,
     if backend == "ref":
         return ref.weighted_histogram(tokens, weights, vocab)
     interpret = backend == "interpret"
-    vb = DEFAULT_VOCAB_BLOCK if vocab % DEFAULT_VOCAB_BLOCK == 0 else _pick_block(vocab)
+    vb, padded_vocab = _pick_block(vocab)
     toks = _pad_to(tokens, DEFAULT_TOKEN_BLOCK, 0)
     w = _pad_to(weights, DEFAULT_TOKEN_BLOCK, 0)
-    out = fct_count_pallas(toks, w, vocab, vocab_block=vb, interpret=interpret)
+    out = fct_count_pallas(toks, w, padded_vocab, vocab_block=vb,
+                           interpret=interpret)
+    if padded_vocab != vocab:
+        out = out[:vocab]
     return out.astype(weights.dtype)
 
 
-def _pick_block(vocab: int) -> int:
-    for vb in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
-        if vocab % vb == 0:
-            return vb
-    return 1
+def _pick_block(vocab: int):
+    """(vocab_block, padded_vocab): ragged vocabs pad up to a lane-aligned
+    multiple of 128 (tokens are < vocab, so the tail slots stay zero and are
+    sliced off) instead of degrading to a vocab-sized grid of 1-wide tiles."""
+    if vocab % DEFAULT_VOCAB_BLOCK == 0:
+        return DEFAULT_VOCAB_BLOCK, vocab
+    padded = -(-vocab // 128) * 128
+    for vb in (DEFAULT_VOCAB_BLOCK, 256, 128):
+        if padded % vb == 0:
+            return vb, padded
+    raise AssertionError(padded)  # unreachable: padded is a 128-multiple

@@ -27,8 +27,11 @@ def _kernel(a_ref, b_ref, o_ref, h_scr, *, block_s: int):
         h_scr[...] = jnp.zeros_like(h_scr)
 
     def step(t, h):
-        h = a_ref[0, t, :] * h + b_ref[0, t, :]
-        pl.store(o_ref, (0, pl.dslice(t, 1), slice(None)), h[None])
+        # unit dims indexed with dslice, not bare ints: the interpret-mode
+        # discharge rule only accepts Slice/array indices
+        idx = (pl.dslice(0, 1), pl.dslice(t, 1), slice(None))
+        h = pl.load(a_ref, idx)[0, 0] * h + pl.load(b_ref, idx)[0, 0]
+        pl.store(o_ref, idx, h[None, None])
         return h
 
     h_scr[...] = lax.fori_loop(0, block_s, step, h_scr[...])

@@ -2,11 +2,15 @@
 query with the two-MapReduce-job engine.
 
     python -m repro.launch.fct_run --keywords alps bordeaux --top-k 8 \
-        --mode skew --rho 4 --scale 2 --skew 1.0
+        --mode skew --rho 4 --scale 2 --skew 1.0 --repeat 3
+
+Queries execute through the runtime engine (repro/runtime): ``--repeat``
+re-runs the query to show the warm-cache latency next to the cold one.
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 
 def main():
@@ -20,22 +24,40 @@ def main():
     ap.add_argument("--sample-frac", type=float, default=0.25)
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--skew", type=float, default=0.0)
+    ap.add_argument("--repeat", type=int, default=1,
+                    help="run the query N times (warm runs hit the "
+                         "compiled-executable cache)")
     args = ap.parse_args()
 
     from examples.quickstart import TOK, build_db
     from repro.core.fct import run_fct_query
     from repro.data.tokenizer import decode_topk
+    from repro.runtime.engine import default_engine
 
     schema = build_db(n_fact=int(2000 * args.scale))
     kws = [int(TOK.encode(w, 1)[0]) for w in args.keywords]
-    res = run_fct_query(schema, kws, r_max=args.r_max, k_terms=args.top_k,
-                        mode=args.mode, rho=args.rho,
-                        sample_frac=args.sample_frac,
-                        stop_mask=TOK.stop_mask())
+    engine = default_engine()
+    res = None
+    for rep in range(max(1, args.repeat)):
+        traces0 = engine.cache.traces
+        t0 = time.perf_counter()
+        res = run_fct_query(schema, kws, r_max=args.r_max,
+                            k_terms=args.top_k, mode=args.mode,
+                            rho=args.rho, sample_frac=args.sample_frac,
+                            stop_mask=TOK.stop_mask(), engine=engine)
+        ms = (time.perf_counter() - t0) * 1e3
+        label = "cold" if rep == 0 else "warm"
+        print(f"run {rep} ({label}): {ms:.1f}ms "
+              f"traces={engine.cache.traces - traces0}")
     print(f"query={args.keywords} mode={args.mode} "
           f"CNs={res.n_cns} (joined {res.n_joined_cns}) "
           f"shuffle={res.shuffle_bytes / 1e6:.2f}MB "
           f"imbalance={res.imbalance:.2f}")
+    st = engine.stats()
+    print(f"engine: {st['entries']} cached executables, "
+          f"{st['hits']} hits / {st['misses']} misses, "
+          f"{st['traces']} traces, {st['batches_run']} batched dispatches "
+          f"for {st['cns_run']} CNs")
     for word, freq in decode_topk(TOK, res.term_ids, res.freqs):
         print(f"  {word:16s} {freq}")
 

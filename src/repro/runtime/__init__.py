@@ -1,0 +1,6 @@
+"""FCT query execution runtime: shape bucketing, compiled-executable caching
+and batched multi-CN dispatch (see README.md in this directory)."""
+from repro.runtime.cache import ExecutableCache, default_cache
+from repro.runtime.engine import FCTEngine, default_engine
+
+__all__ = ["ExecutableCache", "FCTEngine", "default_cache", "default_engine"]

@@ -1,0 +1,119 @@
+"""Shape bucketing and multi-CN stacking for the FCT runtime.
+
+A ``CNPlan``'s device arrays have data-dependent dims: per-device rows ``S``
+(tuple-set size / P), send-table capacity ``C`` (max rows any worker ships to
+any other) and text width ``L``.  Left alone, every CN of every query lowers
+to a fresh XLA program.  Bucketing rounds each of those dims up to a power of
+two (``BUCKET_MIN`` floor), so the infinite family of exact shapes collapses
+onto a small lattice of *signatures* — the unit of executable caching and of
+multi-CN batching.
+
+Padding is semantics-free by construction:
+  * extra ``S`` rows are never named by any send-table entry,
+  * extra ``C`` slots hold -1, which the device program masks out,
+  * extra ``L`` columns hold PAD_ID, which the histogram never counts,
+  * a larger key ``domain`` only grows the num-arrays' zero tail.
+
+``stack_group`` then stacks same-signature plans along a leading CN axis
+[N, P, ...]; the engine vmaps the per-CN device program over that axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.plan import CNPlan, RelationRoute
+from repro.data.schema import PAD_ID
+
+BUCKET_MIN = 8
+
+
+def bucket_pow2(n: int, minimum: int = BUCKET_MIN) -> int:
+    """Smallest power of two >= max(n, minimum)."""
+    n = max(int(n), minimum, 1)
+    return 1 << (n - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class RelationSig:
+    """Padded dims of one routed relation: [P, rows, text_len] text,
+    [P, P, cap] send table, key domain (0 for the fact side)."""
+
+    rows: int
+    cap: int
+    text_len: int
+    domain: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSignature:
+    """Shape-bucket signature of a CNPlan — the executable-cache key's
+    structural part.  Two plans with equal signatures lower to the same XLA
+    program and may be stacked into one batched dispatch."""
+
+    n_devices: int
+    vocab: int
+    fact: RelationSig
+    dims: Tuple[RelationSig, ...]
+
+    @property
+    def m(self) -> int:
+        return len(self.dims)
+
+
+def _route_sig(route: RelationRoute, domain: int, bucket: bool) -> RelationSig:
+    _, S, L = route.text.shape
+    C = route.send.shape[-1]
+    if bucket:
+        S, C, L = bucket_pow2(S), bucket_pow2(C), bucket_pow2(L)
+        domain = bucket_pow2(domain) if domain else 0
+    return RelationSig(rows=S, cap=C, text_len=L, domain=domain)
+
+
+def plan_signature(plan: CNPlan, bucket: bool = True) -> PlanSignature:
+    dims = tuple(_route_sig(plan.dims[i], plan.key_domains[i], bucket)
+                 for i in plan.included)
+    return PlanSignature(n_devices=plan.n_devices, vocab=plan.vocab_size,
+                         fact=_route_sig(plan.fact, 0, bucket), dims=dims)
+
+
+def _pad_route(route: RelationRoute, sig: RelationSig) -> Dict[str, np.ndarray]:
+    P, S, L = route.text.shape
+    text = np.pad(route.text, ((0, 0), (0, sig.rows - S), (0, sig.text_len - L)),
+                  constant_values=PAD_ID)
+    key_pad = ((0, 0), (0, sig.rows - S)) + ((0, 0),) * (route.keys.ndim - 2)
+    keys = np.pad(route.keys, key_pad, constant_values=0)
+    send = np.pad(route.send, ((0, 0), (0, 0), (0, sig.cap - route.send.shape[-1])),
+                  constant_values=-1)
+    return {"text": text, "keys": keys, "send": send}
+
+
+def pad_plan_arrays(plan: CNPlan, sig: PlanSignature):
+    """(fact, [dims]) numpy dicts padded to ``sig`` — same pytree layout as
+    the unpadded device arguments."""
+    fact = _pad_route(plan.fact, sig.fact)
+    dims = [_pad_route(plan.dims[i], rsig)
+            for i, rsig in zip(plan.included, sig.dims)]
+    return fact, dims
+
+
+def group_plans(plans: Sequence[CNPlan], bucket: bool = True
+                ) -> List[Tuple[PlanSignature, List[CNPlan]]]:
+    """Group plans by signature (insertion order preserved): one batched
+    device program per group."""
+    groups: Dict[PlanSignature, List[CNPlan]] = {}
+    for plan in plans:
+        groups.setdefault(plan_signature(plan, bucket), []).append(plan)
+    return list(groups.items())
+
+
+def stack_group(plans: Sequence[CNPlan], sig: PlanSignature):
+    """Stack same-signature plans along a leading CN axis: every leaf goes
+    [P, ...] -> [N, P, ...]."""
+    padded = [pad_plan_arrays(p, sig) for p in plans]
+    fact = {k: np.stack([f[k] for f, _ in padded]) for k in ("text", "keys", "send")}
+    dims = [{k: np.stack([d[j][k] for _, d in padded])
+             for k in ("text", "keys", "send")} for j in range(sig.m)]
+    return fact, dims

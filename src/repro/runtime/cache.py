@@ -1,0 +1,63 @@
+"""Compiled-executable cache for the FCT runtime.
+
+One entry per (program kind, shape signature, backend, mesh) key; the value
+is a ``jax.jit``-wrapped program.  Because the key pins every dimension the
+program's shapes depend on (see batch.PlanSignature), a cache hit can never
+retrace: JAX sees the same callable with the same input shapes.
+
+``traces`` counts actual (re)traces — the wrapped Python body only runs while
+JAX is tracing, so the counter moves exactly once per compiled specialization.
+Tests assert warm queries leave it untouched.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Hashable
+
+import jax
+
+
+class ExecutableCache:
+    """Hashable-key -> jitted callable, with hit/miss/trace counters."""
+
+    def __init__(self) -> None:
+        self._fns: Dict[Hashable, Callable] = {}
+        self.hits = 0
+        self.misses = 0
+        self.traces = 0
+
+    def get_or_build(self, key: Hashable, builder: Callable[[], Callable]):
+        """Return the cached executable for ``key``, building (and jitting)
+        it on first use.  ``builder`` returns the un-jitted program."""
+        fn = self._fns.get(key)
+        if fn is not None:
+            self.hits += 1
+            return fn
+        self.misses += 1
+        inner = builder()
+
+        def traced(*args: Any):
+            self.traces += 1  # runs only under tracing, not per call
+            return inner(*args)
+
+        fn = jax.jit(traced)
+        self._fns[key] = fn
+        return fn
+
+    def __len__(self) -> int:
+        return len(self._fns)
+
+    def clear(self) -> None:
+        self._fns.clear()
+        self.hits = self.misses = self.traces = 0
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self), "hits": self.hits,
+                "misses": self.misses, "traces": self.traces}
+
+
+_GLOBAL_CACHE = ExecutableCache()
+
+
+def default_cache() -> ExecutableCache:
+    """Process-wide cache shared by the default engine and the two-job path."""
+    return _GLOBAL_CACHE

@@ -1,0 +1,114 @@
+"""Batched, cached FCT query execution engine.
+
+The planner (core/plan.py) stays per-CN; this module owns everything after
+planning:
+
+  1. bucket every plan's data-dependent dims to a PlanSignature (batch.py),
+  2. group same-signature CNs and stack them along a leading CN axis,
+  3. run ONE shard_map program per group — the per-CN device body is vmapped
+     over the CN axis, the [N, vocab] histograms are summed on device and
+     cross-worker aggregation is a single psum — so a query costs one device
+     dispatch and one host transfer per signature, not per CN,
+  4. memoize the jitted executables in an ExecutableCache keyed by
+     (signature, N, histogram backend, mesh), so warm queries never retrace.
+
+Integer histograms make the batched sum exactly associative: the engine's
+``all_freqs`` is bit-identical to the sequential per-CN path as long as every
+term's group total fits the histogram dtype (int32 — the same ceiling the
+per-CN device histogram already has; the sequential path accumulates across
+CNs in host int64, so only totals past 2^31 can diverge.  Lifting it needs
+x64-enabled device histograms — see ROADMAP).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.plan import CNPlan
+from repro.runtime.batch import (PlanSignature, group_plans, plan_signature,
+                                 stack_group)
+from repro.runtime.cache import ExecutableCache, default_cache
+
+
+def _build_batched_fn(sig: PlanSignature, mesh: Mesh, histogram_backend: str):
+    """shard_map program over stacked [N, P, ...] relations -> freq[vocab]."""
+    from repro.core.fct import _device_fct_local
+    domains = tuple(d.domain for d in sig.dims)
+    shard = P(None, "w")
+    spec = {"text": shard, "keys": shard, "send": shard}
+
+    def device_fn(fact, dims):
+        fact = {k: jnp.squeeze(v, 1) for k, v in fact.items()}
+        dims = [{k: jnp.squeeze(v, 1) for k, v in d.items()} for d in dims]
+
+        def one_cn(f, ds):
+            return _device_fct_local(f, ds, domains=domains, vocab=sig.vocab,
+                                     histogram_backend=histogram_backend)
+
+        hists = jax.vmap(one_cn)(fact, dims)            # [N, vocab]
+        return lax.psum(jnp.sum(hists, axis=0), "w")    # one psum per group
+
+    return shard_map(device_fn, mesh=mesh, in_specs=(spec, [spec] * sig.m),
+                     out_specs=P(), check_rep=False)
+
+
+class FCTEngine:
+    """Query execution runtime: shape-bucketed compile cache + batched
+    multi-CN dispatch.
+
+    ``batch=False`` dispatches one program per CN (still cached/bucketed);
+    ``bucket=False`` keys on exact shapes (still cached/batched).  The
+    default engine (``default_engine()``) shares the process-wide cache.
+    """
+
+    def __init__(self, cache: Optional[ExecutableCache] = None,
+                 batch: bool = True, bucket: bool = True) -> None:
+        self.cache = cache if cache is not None else ExecutableCache()
+        self.batch = batch
+        self.bucket = bucket
+        self.batches_run = 0
+        self.cns_run = 0
+
+    def run_plans(self, plans: Sequence[CNPlan], mesh: Mesh,
+                  histogram_backend: str = "auto") -> np.ndarray:
+        """Total freq[vocab] (int64) over all joined-CN plans."""
+        if not plans:
+            raise ValueError("run_plans needs at least one plan")
+        total = np.zeros((plans[0].vocab_size,), np.int64)
+        if self.batch:
+            groups = group_plans(plans, bucket=self.bucket)
+        else:
+            groups = [(plan_signature(p, self.bucket), [p]) for p in plans]
+        for sig, group in groups:
+            fact, dims = stack_group(group, sig)
+            key = ("fct_batched", sig, len(group), histogram_backend, mesh)
+            fn = self.cache.get_or_build(
+                key, lambda sig=sig: _build_batched_fn(sig, mesh,
+                                                       histogram_backend))
+            total += np.asarray(fn(fact, dims), np.int64)
+            self.batches_run += 1
+            self.cns_run += len(group)
+        return total
+
+    def stats(self) -> dict:
+        out = self.cache.stats()
+        out.update(batches_run=self.batches_run, cns_run=self.cns_run)
+        return out
+
+
+_DEFAULT_ENGINE: Optional[FCTEngine] = None
+
+
+def default_engine() -> FCTEngine:
+    """Process-wide engine (shared executable cache): repeated queries from
+    anywhere in the process amortize each other's compilations."""
+    global _DEFAULT_ENGINE
+    if _DEFAULT_ENGINE is None:
+        _DEFAULT_ENGINE = FCTEngine(cache=default_cache())
+    return _DEFAULT_ENGINE

@@ -1,0 +1,182 @@
+"""Runtime engine: batched/cached multi-CN execution must be bit-identical to
+the sequential per-CN path, and warm queries must never retrace."""
+import numpy as np
+import pytest
+
+from repro.core.candidate_network import (TupleSets, enumerate_star_cns,
+                                          prune_empty_cns)
+from repro.core.fct import run_cn_plan, run_cn_plan_two_jobs, run_fct_query
+from repro.core.plan import build_cn_plan
+from repro.core.star import fct_star
+from repro.data.schema import (JoinEdge, PAD_ID, Relation, StarSchema,
+                               tokens_histogram)
+from repro.data.tpch import (TpchConfig, generate, generate_customer,
+                             plant_keywords, prejoin_orders_customer)
+from repro.launch.mesh import make_worker_mesh
+from repro.runtime.batch import bucket_pow2, group_plans, plan_signature
+from repro.runtime.cache import ExecutableCache
+from repro.runtime.engine import FCTEngine
+
+
+def _dataset(qtype, seed=5):
+    """Small star/chain/mix datasets (paper Fig. 5 query types)."""
+    cfg = TpchConfig(fact_rows=600, part_rows=48, supp_rows=32, order_rows=40,
+                     cust_rows=24, text_len=6, vocab_size=256, seed=seed)
+    schema = generate(cfg)
+    kws = [200, 201, 202]
+    if qtype == "star":
+        return plant_keywords(schema, {"PART": [200], "SUPPLIER": [201],
+                                       "ORDERS": [202],
+                                       "LINEITEM": [200, 202]}, frac=0.3), kws
+    customer = generate_customer(cfg)
+    rng = np.random.default_rng(seed + 2)
+    cust_of_order = rng.integers(0, customer.rows, schema.dims[2].rows)
+    merged = prejoin_orders_customer(schema.dims[2], customer, cust_of_order)
+    dims = [schema.dims[0], schema.dims[1], merged]
+    edges = list(schema.edges[:2]) + [
+        JoinEdge("ORDERS_CUSTOMER", "orderkey", "orderkey")]
+    schema = StarSchema(fact=schema.fact, dims=dims, edges=edges,
+                        vocab_size=schema.vocab_size)
+    plant = ({"ORDERS_CUSTOMER": [200, 201], "SUPPLIER": [202]}
+             if qtype == "chain"
+             else {"PART": [200], "ORDERS_CUSTOMER": [201, 202]})
+    return plant_keywords(schema, plant, frac=0.3), kws
+
+
+def _sequential_all_freqs(schema, kws, r_max, mesh):
+    """The pre-engine execution path: one device dispatch per joined CN."""
+    ts = TupleSets.build(schema, kws)
+    cns = prune_empty_cns(enumerate_star_cns(len(kws), schema.m, r_max), ts)
+    freq = np.zeros((schema.vocab_size,), np.int64)
+    n_dev = mesh.devices.size
+    for cn in cns:
+        plan = build_cn_plan(schema, ts, cn, n_dev)
+        if plan is None:
+            fact_idx, dim_idx = ts.cn_rows(cn)
+            if fact_idx is not None:
+                text = schema.fact.text[fact_idx]
+            else:
+                (i, rows), = dim_idx.items()
+                text = schema.dims[i].text[rows]
+            freq += tokens_histogram(
+                text, np.ones(text.shape[0], np.int64), schema.vocab_size)
+        else:
+            freq += run_cn_plan(plan, mesh)
+    freq[PAD_ID] = 0
+    return freq
+
+
+@pytest.mark.parametrize("qtype", ["star", "chain", "mix"])
+def test_engine_matches_sequential_path(qtype):
+    schema, kws = _dataset(qtype)
+    mesh = make_worker_mesh()
+    seq = _sequential_all_freqs(schema, kws, 3, mesh)
+    res = run_fct_query(schema, kws, r_max=3, engine=FCTEngine())
+    np.testing.assert_array_equal(res.all_freqs, seq)
+    np.testing.assert_array_equal(res.all_freqs, fct_star(schema, kws, 3))
+
+
+def _crafted_schema(seed):
+    """Schema whose tuple-set SIZES (hence bucket signatures) are fixed while
+    text content and key assignments vary with the seed: keywords are planted
+    into fixed-count disjoint row ranges and the filler vocabulary can never
+    collide with a keyword."""
+    rng = np.random.default_rng(seed)
+    VOCAB, KWA, KWB = 64, 60, 61
+    nf, nd = 96, 16
+
+    def text(rows, length=5):
+        return rng.integers(1, 58, (rows, length)).astype(np.int32)
+
+    def plant(t, rows, kw):
+        t[rows, rng.integers(0, t.shape[1], len(rows))] = kw
+
+    fact_text = text(nf)
+    plant(fact_text, np.arange(0, 20), KWA)
+    plant(fact_text, np.arange(20, 40), KWB)
+    d0, d1 = text(nd), text(nd)
+    plant(d0, np.arange(0, 8), KWB)
+    plant(d1, np.arange(0, 8), KWA)
+    dims = [Relation("D0", keys={"k0": np.arange(nd, dtype=np.int32)},
+                     key_domains={"k0": nd}, text=d0),
+            Relation("D1", keys={"k1": np.arange(nd, dtype=np.int32)},
+                     key_domains={"k1": nd}, text=d1)]
+    fact = Relation("F",
+                    keys={"k0": rng.integers(0, nd, nf).astype(np.int32),
+                          "k1": rng.integers(0, nd, nf).astype(np.int32)},
+                    key_domains={"k0": nd, "k1": nd}, text=fact_text)
+    schema = StarSchema(fact=fact, dims=dims,
+                        edges=[JoinEdge("D0", "k0", "k0"),
+                               JoinEdge("D1", "k1", "k1")],
+                        vocab_size=VOCAB)
+    return schema, [KWA, KWB]
+
+
+def test_warm_query_with_new_data_triggers_zero_retraces():
+    engine = FCTEngine()
+    s1, kws = _crafted_schema(seed=0)
+    s2, _ = _crafted_schema(seed=1)
+    r1 = run_fct_query(s1, kws, r_max=3, engine=engine)
+    traces, misses = engine.cache.traces, engine.cache.misses
+    assert traces > 0  # the cold query did compile something
+    r2 = run_fct_query(s2, kws, r_max=3, engine=engine)
+    assert engine.cache.traces == traces, "warm query retraced"
+    assert engine.cache.misses == misses, "warm query missed the cache"
+    assert engine.cache.hits > 0
+    np.testing.assert_array_equal(r1.all_freqs, fct_star(s1, kws, 3))
+    np.testing.assert_array_equal(r2.all_freqs, fct_star(s2, kws, 3))
+
+
+def test_same_signature_cns_batch_into_one_dispatch():
+    # F^{a}⋈D0^{b} and F^{b}⋈D1^{a} have equal tuple-set sizes and domains,
+    # so they share a bucket signature and must ride one device program.
+    schema, kws = _crafted_schema(seed=3)
+    engine = FCTEngine()
+    res = run_fct_query(schema, kws, r_max=3, engine=engine)
+    assert res.n_joined_cns >= 3
+    assert engine.batches_run < res.n_joined_cns
+    assert engine.cns_run == res.n_joined_cns
+    np.testing.assert_array_equal(res.all_freqs, fct_star(schema, kws, 3))
+
+
+def test_unbatched_engine_matches_batched():
+    schema, kws = _dataset("star")
+    batched = run_fct_query(schema, kws, r_max=3, engine=FCTEngine())
+    unbatched = run_fct_query(schema, kws, r_max=3,
+                              engine=FCTEngine(batch=False, bucket=False))
+    np.testing.assert_array_equal(batched.all_freqs, unbatched.all_freqs)
+
+
+def _largest_plan(schema, kws):
+    ts = TupleSets.build(schema, kws)
+    cns = prune_empty_cns(enumerate_star_cns(len(kws), schema.m, 3), ts)
+    cn = max((c for c in cns if c.single_dim < 0 and len(c.included) == 2),
+             key=lambda c: len(ts.cn_rows(c)[0]))
+    return build_cn_plan(schema, ts, cn, 1)
+
+
+def test_two_jobs_shares_executable_cache():
+    mesh = make_worker_mesh(1)  # plans below are built for one device
+    cache = ExecutableCache()
+    p1 = _largest_plan(*_crafted_schema(seed=0))
+    p2 = _largest_plan(*_crafted_schema(seed=1))
+    f1 = run_cn_plan_two_jobs(p1, mesh, cache=cache)
+    traces = cache.traces
+    assert traces > 0 and len(cache) == 2  # job1 + job2
+    f2 = run_cn_plan_two_jobs(p2, mesh, cache=cache)
+    assert cache.traces == traces, "second two-job run retraced"
+    assert cache.hits == 2
+    np.testing.assert_array_equal(f1, run_cn_plan(p1, mesh))
+    np.testing.assert_array_equal(f2, run_cn_plan(p2, mesh))
+
+
+def test_bucketing_policy():
+    assert bucket_pow2(1) == 8 and bucket_pow2(8) == 8
+    assert bucket_pow2(9) == 16 and bucket_pow2(100) == 128
+    # plans with slightly different tuple-set sizes share one signature...
+    s1, kws = _crafted_schema(seed=0)
+    p1 = _largest_plan(s1, kws)
+    assert plan_signature(p1) == plan_signature(_largest_plan(s1, kws))
+    # ...and grouping keys on the signature
+    groups = group_plans([p1, p1, p1])
+    assert len(groups) == 1 and len(groups[0][1]) == 3

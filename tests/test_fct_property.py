@@ -1,5 +1,8 @@
 """Property-based validation of the FCT engine's core invariants."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dependency
 from hypothesis import given, settings, strategies as st
 
 from repro.core.candidate_network import TupleSets, enumerate_star_cns, prune_empty_cns
