@@ -12,9 +12,10 @@ cache's trace counters so time, traffic and compilation can be correlated.
 from __future__ import annotations
 
 from benchmarks.common import emit, make_dataset, timed
+from repro.api import FCTRequest, FCTSession
 from repro.core.candidate_network import (TupleSets, enumerate_star_cns,
                                           prune_empty_cns)
-from repro.core.fct import run_cn_plan, run_fct_query
+from repro.core.fct import run_cn_plan
 from repro.core.plan import build_cn_plan
 from repro.core.star import fct_star
 from repro.launch.mesh import make_worker_mesh
@@ -26,7 +27,9 @@ def run():
         for scale in (0.5, 1.0, 2.0, 4.0):
             schema, kws = make_dataset(scale=scale, query_type=qtype)
             engine = FCTEngine()  # fresh cache: first call is a true cold run
-            query = lambda: run_fct_query(schema, kws, r_max=4, engine=engine)
+            session = FCTSession(schema, engine=engine)
+            req = FCTRequest(keywords=tuple(kws), r_max=4)
+            query = lambda: session.query(req)
             cold_us = timed(query, warmup=0, iters=1)
             cold_traces = engine.cache.traces
             batches = engine.batches_run  # per-query device dispatches
@@ -68,11 +71,10 @@ def run():
     # nodes); the engine's per-worker makespan scaling is what the
     # skew_adjust and shares benchmarks measure.
     schema, kws = make_dataset(scale=2.0)
-    engine = FCTEngine()
+    session = FCTSession(schema, engine=FCTEngine())
+    req = FCTRequest(keywords=tuple(kws), r_max=4)
     us_single = timed(lambda: fct_star(schema, kws, 4), warmup=0, iters=1)
-    us_engine = timed(lambda: run_fct_query(schema, kws, r_max=4,
-                                            engine=engine),
-                      warmup=1, iters=2)
+    us_engine = timed(lambda: session.query(req), warmup=1, iters=2)
     emit("fct_single_machine/star/scale2", us_single, "numpy star method")
     emit("fct_engine_warm/star/scale2", us_engine,
          "1-device engine (executable cache warm); parallel speedup only at "

@@ -29,10 +29,11 @@ def main() -> None:
                     metavar="PATH", help="write results as JSON")
     args = ap.parse_args()
 
-    from benchmarks import (common, kernel_micro, response_time, shares_comm,
-                            shuffle_size, skew_adjust)
+    from benchmarks import (common, kernel_micro, multi_query, response_time,
+                            shares_comm, shuffle_size, skew_adjust)
     mods = {
         "response_time": response_time,
+        "multi_query": multi_query,
         "shuffle_size": shuffle_size,
         "skew_adjust": skew_adjust,
         "shares_comm": shares_comm,

@@ -7,12 +7,20 @@
 
 Run:  PYTHONPATH=src python examples/fct_query_expansion.py
 """
+import os
+import sys
+
 import numpy as np
 
-from examples.quickstart import TOK, build_db
+# allow `python examples/fct_query_expansion.py` from anywhere
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from examples.quickstart import TOK, build_db  # noqa: E402
+from repro.api import FCTRequest, FCTSession
 from repro.core.candidate_network import TupleSets, enumerate_star_cns, prune_empty_cns
-from repro.core.fct import run_fct_query
-from repro.data.tokenizer import decode_topk
 
 
 def result_count(schema, kws, r_max=4):
@@ -46,14 +54,14 @@ def result_count(schema, kws, r_max=4):
 def main():
     schema = build_db()
     query = ["alps", "bordeaux"]
-    kws = [int(TOK.encode(w, 1)[0]) for w in query]
+    session = FCTSession(schema, tokenizer=TOK)
+    kws = list(session.resolve_keywords(query))
     n0 = result_count(schema, kws)
-    res = run_fct_query(schema, kws, r_max=4, k_terms=5,
-                        stop_mask=TOK.stop_mask())
-    terms = decode_topk(TOK, res.term_ids, res.freqs)
+    res = session.query(FCTRequest(keywords=tuple(query), top_k=5, r_max=4))
+    terms = res.topk()
     print(f"query {query}: {n0} results; top co-occurring terms: {terms}")
     for word, _ in terms[:3]:
-        expanded = kws + [int(TOK.encode(word, 1)[0])]
+        expanded = kws + list(session.resolve_keywords([word]))
         n1 = result_count(schema, expanded)
         print(f"  + '{word}': {n1} results "
               f"({100 * (1 - n1 / max(n0, 1)):.1f}% narrower)")

@@ -9,9 +9,9 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core.fct import run_fct_query
+from repro.api import FCTRequest, FCTSession
 from repro.data.schema import JoinEdge, Relation, StarSchema
-from repro.data.tokenizer import HashingTokenizer, decode_topk
+from repro.data.tokenizer import HashingTokenizer
 
 VOCAB = 4096
 TOK = HashingTokenizer(VOCAB)
@@ -56,15 +56,20 @@ def build_db(seed=0, n_part=120, n_supp=60, n_order=150, n_fact=2000):
 def main():
     schema = build_db()
     query = ["alps", "bordeaux"]
-    kws = [TOK.encode(w, 1)[0] for w in query]
-    print(f"keyword query: {query}  (term ids {kws})")
-    res = run_fct_query(schema, [int(k) for k in kws], r_max=4, k_terms=8,
-                        stop_mask=TOK.stop_mask())
+    # the session owns the tokenizer: requests carry raw keyword strings
+    session = FCTSession(schema, tokenizer=TOK)
+    res = session.query(FCTRequest(keywords=tuple(query), top_k=8, r_max=4))
+    print(f"keyword query: {query}  "
+          f"(term ids {list(session.resolve_keywords(query))})")
     print(f"candidate networks: {res.n_cns} ({res.n_joined_cns} joined)")
     print(f"shuffle: {res.shuffle_rows} rows / {res.shuffle_bytes / 1e6:.2f} MB"
           f" | worker imbalance {res.imbalance:.2f}")
+    print(f"latency: {res.timings['total_ms']:.1f}ms "
+          f"(plan {res.timings['plan_ms']:.1f}ms, "
+          f"exec {res.timings['execute_ms']:.1f}ms, "
+          f"{'cold' if res.cold else 'warm'})")
     print("top frequent co-occurring terms:")
-    for word, freq in decode_topk(TOK, res.term_ids, res.freqs):
+    for word, freq in res.topk():
         print(f"  {word:15s} freq={freq}")
 
 

@@ -1,0 +1,7 @@
+"""FCT service API: request/response objects and the FCTSession front door
+(sync ``query``, cross-query-batched ``query_batch``, pipelined ``submit``).
+See README.md in this directory for the request lifecycle."""
+from repro.api.request import FCTRequest, FCTResponse
+from repro.api.session import FCTSession, SessionConfig
+
+__all__ = ["FCTRequest", "FCTResponse", "FCTSession", "SessionConfig"]

@@ -16,7 +16,7 @@ path is the default: on a TPU there is no reason to spill the intermediate.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,16 +25,24 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.candidate_network import TupleSets, enumerate_star_cns, prune_empty_cns
-from repro.core.plan import CNPlan, build_cn_plan
-from repro.core.star import topk_terms
-from repro.data.schema import PAD_ID, StarSchema, tokens_histogram
+from repro.core.plan import CNPlan
+from repro.data.schema import StarSchema
 from repro.kernels.fct_count.ops import weighted_histogram
 
 
 # ---------------------------------------------------------------------------
 # device-side program
 # ---------------------------------------------------------------------------
+
+def _acc_dtype():
+    """Volume/histogram accumulator dtype (read at trace time).
+
+    int32 by default; int64 when ``jax_enable_x64`` is on, so term totals and
+    intermediate volume products past 2^31 stay exact (the ROADMAP x64 item).
+    All cache keys that memoize traced programs include this flag.
+    """
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
 
 def _route(text, keys, send):
     """Gather rows into per-destination buffers and all_to_all them.
@@ -61,6 +69,7 @@ def _device_fct_local(fact, dims, *, domains: Tuple[int, ...], vocab: int,
                       histogram_backend: str):
     """One worker's MR¹+MR² for one CN, WITHOUT the final cross-worker psum
     (the runtime engine vmaps this over a batch of CNs and psums once)."""
+    acc = _acc_dtype()
     ftext, fkeys, fmask = _route(fact["text"], fact["keys"], fact["send"])
     routed_dims = [
         _route(d["text"], d["keys"], d["send"]) for d in dims
@@ -75,8 +84,8 @@ def _device_fct_local(fact, dims, *, domains: Tuple[int, ...], vocab: int,
         nums.append(num)
 
     # --- MR1: volumes (Algorithm 3 stage 2) ---
-    probes = [nums[i][fkeys[:, i]] for i in range(m)]
-    fvalid = fmask.astype(jnp.int32)
+    probes = [nums[i][fkeys[:, i]].astype(acc) for i in range(m)]
+    fvalid = fmask.astype(acc)
     vol_fact = fvalid
     for pr in probes:
         vol_fact = vol_fact * pr
@@ -86,10 +95,10 @@ def _device_fct_local(fact, dims, *, domains: Tuple[int, ...], vocab: int,
         for j in range(m):
             if j != i:
                 others = others * probes[j]
-        contrib = jnp.zeros((domains[i],), jnp.int32).at[fkeys[:, i]].add(
+        contrib = jnp.zeros((domains[i],), acc).at[fkeys[:, i]].add(
             others, mode="drop")
         (dtext, dkeys, dmask) = routed_dims[i]
-        dim_vols.append(contrib[dkeys] * dmask.astype(jnp.int32))
+        dim_vols.append(contrib[dkeys] * dmask.astype(acc))
 
     # --- MR2: weighted histograms + global aggregation ---
     hist = weighted_histogram(ftext, vol_fact, vocab,
@@ -154,6 +163,7 @@ def _device_job1(fact, dims, *, domains):
     """MR1 only: route + num-arrays + volumes.  Returns the vol-arrays
     artifact {text, vol} per relation — the paper's reducer output that
     MapReduce2nd consumes (and the natural checkpoint boundary)."""
+    acc = _acc_dtype()
     ftext, fkeys, fmask = _route(fact["text"], fact["keys"], fact["send"])
     routed_dims = [_route(d["text"], d["keys"], d["send"]) for d in dims]
     m = len(dims)
@@ -161,8 +171,8 @@ def _device_job1(fact, dims, *, domains):
     for (dtext, dkeys, dmask), dom in zip(routed_dims, domains):
         nums.append(jnp.zeros((dom,), jnp.int32).at[dkeys].add(
             dmask.astype(jnp.int32), mode="drop"))
-    probes = [nums[i][fkeys[:, i]] for i in range(m)]
-    fvalid = fmask.astype(jnp.int32)
+    probes = [nums[i][fkeys[:, i]].astype(acc) for i in range(m)]
+    fvalid = fmask.astype(acc)
     vol_fact = fvalid
     for pr in probes:
         vol_fact = vol_fact * pr
@@ -172,11 +182,11 @@ def _device_job1(fact, dims, *, domains):
         for j in range(m):
             if j != i:
                 others = others * probes[j]
-        contrib = jnp.zeros((domains[i],), jnp.int32).at[fkeys[:, i]].add(
+        contrib = jnp.zeros((domains[i],), acc).at[fkeys[:, i]].add(
             others, mode="drop")
         (dtext, dkeys, dmask) = routed_dims[i]
         out["dims"].append({"text": dtext,
-                            "vol": contrib[dkeys] * dmask.astype(jnp.int32)})
+                            "vol": contrib[dkeys] * dmask.astype(acc)})
     return out
 
 
@@ -213,8 +223,9 @@ def run_cn_plan_two_jobs(plan: CNPlan, mesh: Mesh,
     specs_rel = {"text": shard, "keys": shard, "send": shard}
     vol_spec = {"fact": {"text": shard, "vol": shard},
                 "dims": [{"text": shard, "vol": shard}] * m}
+    x64 = bool(jax.config.jax_enable_x64)
     job1 = cache.get_or_build(
-        ("fct_job1", sig, mesh),
+        ("fct_job1", sig, mesh, x64),
         lambda: shard_map(
             lambda f, ds: _device_job1(
                 {k: jnp.squeeze(v, 0) for k, v in f.items()},
@@ -229,7 +240,7 @@ def run_cn_plan_two_jobs(plan: CNPlan, mesh: Mesh,
         save_checkpoint(checkpoint_dir, 1, vol_arrays)
         _, vol_arrays = restore_checkpoint(checkpoint_dir, vol_arrays)
     job2 = cache.get_or_build(
-        ("fct_job2", sig, histogram_backend, mesh),
+        ("fct_job2", sig, histogram_backend, mesh, x64),
         lambda: shard_map(
             lambda va: _device_job2(va, vocab=plan.vocab_size,
                                     histogram_backend=histogram_backend),
@@ -245,7 +256,7 @@ def lower_cn_plan(plan: CNPlan, mesh: Mesh, histogram_backend: str = "auto"):
 
 
 # ---------------------------------------------------------------------------
-# query runner
+# query runner (deprecated shim — the service API lives in repro/api)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -270,53 +281,28 @@ def run_fct_query(schema: StarSchema, keywords: Sequence[int], *,
                   engine=None) -> FCTResult:
     """End-to-end FCT query (Def. 6) over the device mesh.
 
-    Joined CNs execute through the runtime engine (repro/runtime): plans are
-    shape-bucketed, same-signature CNs batch into one device program, and the
-    compiled executables are cached so warm queries never retrace.  Pass an
-    explicit ``engine`` to isolate (or share) a cache; the default is the
-    process-wide engine.
+    .. deprecated::
+        Thin shim over :class:`repro.api.FCTSession` — each call builds a
+        throwaway session, so tuple sets are re-derived every time.  Callers
+        issuing more than one query should hold an ``FCTSession`` (which also
+        offers ``query_batch`` and pipelined ``submit``).
     """
-    if mesh is None:
-        devs = np.array(jax.devices())
-        mesh = Mesh(devs, ("w",))
-    n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
-    if engine is None:
-        from repro.runtime.engine import default_engine
-        engine = default_engine()
+    import warnings
 
-    ts = TupleSets.build(schema, keywords)
-    cns = prune_empty_cns(enumerate_star_cns(len(keywords), schema.m, r_max), ts)
-    freq = np.zeros((schema.vocab_size,), np.int64)
-    plans: List[CNPlan] = []
-    shuffle_rows = shuffle_bytes = 0
-    imbalance, dominant_cost = 1.0, -1.0
-    for cn in cns:
-        plan = build_cn_plan(schema, ts, cn, n_dev, mode=mode, rho=rho,
-                             sample_frac=sample_frac, salt=salt)
-        if plan is None:
-            # single-relation CN: a map-only word-count (no shuffle needed)
-            fact_idx, dim_idx = ts.cn_rows(cn)
-            if fact_idx is not None:
-                text = schema.fact.text[fact_idx]
-            else:
-                (i, rows), = dim_idx.items()
-                text = schema.dims[i].text[rows]
-            freq += tokens_histogram(
-                text, np.ones(text.shape[0], np.int64), schema.vocab_size)
-            continue
-        plans.append(plan)
-        shuffle_rows += plan.shuffle_rows
-        shuffle_bytes += plan.shuffle_bytes
-        # report balance of the dominant (most expensive) CN, not of tiny ones
-        total = float(plan.schedule.device_cost.sum())
-        if total > dominant_cost:
-            dominant_cost, imbalance = total, plan.schedule.imbalance
-    n_joined = len(plans)
-    if plans:
-        freq += engine.run_plans(plans, mesh, histogram_backend)
-    freq[PAD_ID] = 0
-    ids, f = topk_terms(freq, keywords, k_terms, stop_mask)
-    return FCTResult(term_ids=ids, freqs=f, all_freqs=freq,
-                     n_cns=len(cns), n_joined_cns=n_joined,
-                     shuffle_rows=shuffle_rows, shuffle_bytes=shuffle_bytes,
-                     imbalance=imbalance)
+    from repro.api import FCTRequest, FCTSession, SessionConfig
+    warnings.warn(
+        "run_fct_query is deprecated; use repro.api.FCTSession "
+        "(query/query_batch/submit)", DeprecationWarning, stacklevel=2)
+    session = FCTSession(schema, engine=engine, mesh=mesh,
+                         stop_mask=stop_mask,
+                         config=SessionConfig(
+                             histogram_backend=histogram_backend))
+    resp = session.query(FCTRequest(
+        keywords=tuple(int(k) for k in keywords), top_k=k_terms, r_max=r_max,
+        mode=mode, rho=rho, sample_frac=sample_frac, salt=salt))
+    return FCTResult(term_ids=resp.term_ids, freqs=resp.freqs,
+                     all_freqs=resp.all_freqs, n_cns=resp.n_cns,
+                     n_joined_cns=resp.n_joined_cns,
+                     shuffle_rows=resp.shuffle_rows,
+                     shuffle_bytes=resp.shuffle_bytes,
+                     imbalance=resp.imbalance)

@@ -29,12 +29,15 @@ def weighted_histogram(tokens: jnp.ndarray, weights: jnp.ndarray, vocab: int,
     """freq[w] = Σ_rows weight[row]·count(tokens[row], w); PAD excluded.
 
     Output dtype follows ``weights`` for ref, float32 for the kernel path
-    (exact for counts < 2^24; the FCT engine casts back to int32).
+    (exact for counts < 2^24; the FCT engine casts back to int32).  int64
+    weights (the engine's jax_enable_x64 mode) always take the ref path:
+    the kernel's float32 accumulator cannot represent x64-exact totals —
+    an integer-exact TPU accumulator is a ROADMAP item.
     """
     if backend == "auto":
         platform = jax.default_backend()
         backend = "pallas" if platform == "tpu" else "ref"
-    if backend == "ref":
+    if backend == "ref" or weights.dtype == jnp.int64:
         return ref.weighted_histogram(tokens, weights, vocab)
     interpret = backend == "interpret"
     vb, padded_vocab = _pick_block(vocab)

@@ -1,11 +1,13 @@
 """FCT query launcher: generate (or load) a star database and answer an FCT
-query with the two-MapReduce-job engine.
+query through the session service API.
 
     python -m repro.launch.fct_run --keywords alps bordeaux --top-k 8 \
         --mode skew --rho 4 --scale 2 --skew 1.0 --repeat 3
 
-Queries execute through the runtime engine (repro/runtime): ``--repeat``
-re-runs the query to show the warm-cache latency next to the cold one.
+Queries execute through an FCTSession over the runtime engine: ``--repeat``
+re-runs the query to show the warm-cache latency next to the cold one.  The
+cold/warm label comes from the engine's actual trace delta for that rep, not
+the rep index — with a shared process-wide cache, rep 0 can already be warm.
 """
 from __future__ import annotations
 
@@ -30,35 +32,32 @@ def main():
     args = ap.parse_args()
 
     from examples.quickstart import TOK, build_db
-    from repro.core.fct import run_fct_query
-    from repro.data.tokenizer import decode_topk
-    from repro.runtime.engine import default_engine
+    from repro.api import FCTRequest, FCTSession
 
     schema = build_db(n_fact=int(2000 * args.scale))
-    kws = [int(TOK.encode(w, 1)[0]) for w in args.keywords]
-    engine = default_engine()
+    session = FCTSession(schema, tokenizer=TOK)  # process-wide engine
+    req = FCTRequest(keywords=tuple(args.keywords), top_k=args.top_k,
+                     r_max=args.r_max, mode=args.mode, rho=args.rho,
+                     sample_frac=args.sample_frac)
     res = None
     for rep in range(max(1, args.repeat)):
-        traces0 = engine.cache.traces
         t0 = time.perf_counter()
-        res = run_fct_query(schema, kws, r_max=args.r_max,
-                            k_terms=args.top_k, mode=args.mode,
-                            rho=args.rho, sample_frac=args.sample_frac,
-                            stop_mask=TOK.stop_mask(), engine=engine)
+        res = session.query(req)
         ms = (time.perf_counter() - t0) * 1e3
-        label = "cold" if rep == 0 else "warm"
+        label = "cold" if res.cold else "warm"  # from the engine trace delta
         print(f"run {rep} ({label}): {ms:.1f}ms "
-              f"traces={engine.cache.traces - traces0}")
+              f"traces={res.engine_stats['traces']}")
     print(f"query={args.keywords} mode={args.mode} "
           f"CNs={res.n_cns} (joined {res.n_joined_cns}) "
           f"shuffle={res.shuffle_bytes / 1e6:.2f}MB "
           f"imbalance={res.imbalance:.2f}")
-    st = engine.stats()
+    st = session.stats()
     print(f"engine: {st['entries']} cached executables, "
           f"{st['hits']} hits / {st['misses']} misses, "
-          f"{st['traces']} traces, {st['batches_run']} batched dispatches "
-          f"for {st['cns_run']} CNs")
-    for word, freq in decode_topk(TOK, res.term_ids, res.freqs):
+          f"{st['traces']} traces, {st['evictions']} evictions, "
+          f"{st['batches_run']} batched dispatches for {st['cns_run']} CNs; "
+          f"plan cache {st['plan_hits']} hits")
+    for word, freq in res.topk():
         print(f"  {word:16s} {freq}")
 
 

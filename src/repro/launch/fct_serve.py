@@ -1,0 +1,168 @@
+"""FCT serving loop: a long-lived FCTSession answering streamed queries.
+
+Reads whitespace-separated keyword queries (one per line) from stdin or a
+file, streams responses through the session's pipelined ``submit`` path
+(printing each response as soon as its future resolves, in FIFO order) and
+reports per-query latency, cold/warm status and cache statistics — the
+serving demo for the paper's online query-refinement workload.
+
+    # interactive / piped
+    echo "alps bordeaux" | PYTHONPATH=src python -m repro.launch.fct_serve
+
+    # from a file, with a bounded executable cache
+    PYTHONPATH=src python -m repro.launch.fct_serve --queries q.txt \
+        --cache-max-entries 64
+
+    # self-checking smoke run (used by CI)
+    PYTHONPATH=src python -m repro.launch.fct_serve --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MAX_INFLIGHT = 32  # backpressure: block on the oldest future past this
+
+SMOKE_QUERIES = [
+    "alps bordeaux",            # compiles this shape family
+    "alps bordeaux",            # repeat: plan cache + executable reuse
+    "polished azure",           # same shapes, different keywords
+    "alps express priority",    # 3-keyword query: new CN family
+    "bordeaux fragile",
+    "alps bordeaux",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", default=None, metavar="PATH",
+                    help="read queries from a file instead of stdin")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run a canned query stream and self-check (CI)")
+    ap.add_argument("--sync", action="store_true",
+                    help="serve with sync query() instead of the pipeline")
+    ap.add_argument("--top-k", type=int, default=5)
+    ap.add_argument("--r-max", type=int, default=4)
+    ap.add_argument("--mode", default="uniform",
+                    choices=["uniform", "skew", "round_robin"])
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--cache-max-entries", type=int, default=None,
+                    help="LRU cap on the session's executable cache")
+    args = ap.parse_args()
+
+    from examples.quickstart import TOK, build_db
+    from repro.api import FCTRequest, FCTSession, SessionConfig
+    from repro.runtime.engine import FCTEngine
+
+    t0 = time.perf_counter()
+    schema = build_db(n_fact=int(2000 * args.scale))
+    # with a cache cap the session must own its engine (the cap applies to
+    # a session-owned cache); otherwise isolate a fresh engine for the demo
+    engine = None if args.cache_max_entries is not None else FCTEngine()
+    session = FCTSession(
+        schema, tokenizer=TOK, engine=engine,
+        config=SessionConfig(cache_max_entries=args.cache_max_entries))
+    print(f"# loaded {schema.fact.rows}-row star schema in "
+          f"{(time.perf_counter() - t0) * 1e3:.0f}ms — serving "
+          f"({'sync' if args.sync else 'pipelined'} mode)", flush=True)
+
+    def make_request(line: str):
+        return FCTRequest(keywords=tuple(line.split()), top_k=args.top_k,
+                          r_max=args.r_max, mode=args.mode)
+
+    def report(idx, line, resp, wall_ms):
+        state = "cold" if resp.cold else "warm"
+        terms = " ".join(f"{w}({c})" for w, c in resp.topk())
+        print(f"[{idx}] {line!r}: {wall_ms:.1f}ms ({state}, "
+              f"plan {resp.timings['plan_ms']:.1f}ms + exec "
+              f"{resp.timings['execute_ms']:.1f}ms) "
+              f"cns={resp.n_joined_cns} -> {terms}", flush=True)
+
+    def serve(lines, collect=False):
+        """Stream queries through the session; responses print as soon as
+        they resolve (futures complete in FIFO order).  Returns the
+        responses when ``collect`` (smoke mode only — they hold full
+        frequency vectors, so an open-ended stream must not retain them)."""
+        n = 0
+        inflight = []  # [(idx, line, future, t_submit)]
+        out = [] if collect else None
+
+        def pop_oldest():
+            idx, line, fut, t1 = inflight.pop(0)
+            try:
+                resp = fut.result()
+            except Exception as e:
+                print(f"[{idx}] {line!r}: failed ({e})", flush=True)
+                return
+            report(idx, line, resp, (time.perf_counter() - t1) * 1e3)
+            if out is not None:
+                out.append(resp)
+
+        for line in lines:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            try:
+                req = make_request(line)
+            except ValueError as e:
+                print(f"[{n}] {line!r}: rejected ({e})", flush=True)
+                n += 1
+                continue
+            if args.sync:
+                t1 = time.perf_counter()
+                resp = session.query(req)
+                report(n, line, resp, (time.perf_counter() - t1) * 1e3)
+                if out is not None:
+                    out.append(resp)
+            else:
+                inflight.append((n, line, session.submit(req),
+                                 time.perf_counter()))
+                while inflight and inflight[0][2].done():  # stream results
+                    pop_oldest()
+                while len(inflight) >= MAX_INFLIGHT:       # backpressure
+                    pop_oldest()
+            n += 1
+        while inflight:
+            pop_oldest()
+        return out
+
+    if args.smoke:
+        first = serve(SMOKE_QUERIES, collect=True)
+    elif args.queries:
+        with open(args.queries) as f:
+            serve(f)
+    else:
+        serve(sys.stdin)
+
+    if args.smoke:
+        import numpy as np
+        # a second identical stream must be answered from warm caches with
+        # identical results, in FIFO order
+        second = serve(SMOKE_QUERIES, collect=True)
+        assert len(first) == len(SMOKE_QUERIES) == len(second), \
+            "lost responses"
+        for a, b in zip(first, second):
+            np.testing.assert_array_equal(a.all_freqs, b.all_freqs)
+        # sync repeats are deterministically warm (same executables + plans)
+        session.query(make_request(SMOKE_QUERIES[0]))
+        warm = session.query(make_request(SMOKE_QUERIES[0]))
+        assert warm.cold is False, "sync repeat query retraced"
+        st = session.stats()
+        assert st["plan_hits"] >= len(SMOKE_QUERIES), "plan cache unused"
+        assert st["hits"] > 0, "executable cache unused"
+
+    session.close()
+    st = session.stats()
+    print(f"# served {st['queries_served']} queries | executable cache: "
+          f"{st['entries']} entries, {st['hits']} hits / {st['misses']} "
+          f"misses, {st['traces']} traces, {st['evictions']} evictions | "
+          f"plan cache: {st['plan_entries']} entries, {st['plan_hits']} "
+          f"hits | tuple-set cache: {st['tuple_set_entries']} entries",
+          flush=True)
+    if args.smoke:
+        print("SMOKE OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -99,14 +99,21 @@ def pad_plan_arrays(plan: CNPlan, sig: PlanSignature):
     return fact, dims
 
 
+def group_plan_indices(plans: Sequence[CNPlan], bucket: bool = True
+                       ) -> List[Tuple[PlanSignature, List[int]]]:
+    """Group plan *indices* by signature (insertion order preserved): one
+    batched device program per group."""
+    groups: Dict[PlanSignature, List[int]] = {}
+    for i, plan in enumerate(plans):
+        groups.setdefault(plan_signature(plan, bucket), []).append(i)
+    return list(groups.items())
+
+
 def group_plans(plans: Sequence[CNPlan], bucket: bool = True
                 ) -> List[Tuple[PlanSignature, List[CNPlan]]]:
-    """Group plans by signature (insertion order preserved): one batched
-    device program per group."""
-    groups: Dict[PlanSignature, List[CNPlan]] = {}
-    for plan in plans:
-        groups.setdefault(plan_signature(plan, bucket), []).append(plan)
-    return list(groups.items())
+    """As ``group_plan_indices``, materialized to the plans themselves."""
+    return [(sig, [plans[i] for i in idxs])
+            for sig, idxs in group_plan_indices(plans, bucket)]
 
 
 def stack_group(plans: Sequence[CNPlan], sig: PlanSignature):
@@ -117,3 +124,21 @@ def stack_group(plans: Sequence[CNPlan], sig: PlanSignature):
     dims = [{k: np.stack([d[j][k] for _, d in padded])
              for k in ("text", "keys", "send")} for j in range(sig.m)]
     return fact, dims
+
+
+def pad_cn_axis(fact, dims, n_stack: int):
+    """Pad the leading CN axis of a stacked group to ``n_stack`` with null
+    plans: an all ``-1`` send table routes nothing, so a padded CN's masks,
+    num-arrays, volumes and histogram are exactly zero (same invariants as
+    the per-dim padding above).  Buckets the one data-dependent dim —
+    dynamic-batching window size — that per-plan bucketing can't reach."""
+    def pad(rel):
+        n = rel["text"].shape[0]
+        if n == n_stack:
+            return rel
+        fills = {"text": PAD_ID, "keys": 0, "send": -1}
+        return {k: np.concatenate(
+                    [v, np.full((n_stack - n,) + v.shape[1:], fills[k],
+                                v.dtype)])
+                for k, v in rel.items()}
+    return pad(fact), [pad(d) for d in dims]

@@ -8,27 +8,83 @@ retrace: JAX sees the same callable with the same input shapes.
 ``traces`` counts actual (re)traces — the wrapped Python body only runs while
 JAX is tracing, so the counter moves exactly once per compiled specialization.
 Tests assert warm queries leave it untouched.
+
+``max_entries`` bounds the cache for long-lived serving processes: entries
+are kept in LRU order (a ``get_or_build`` hit refreshes recency) and the
+least-recently-used executable is dropped once the cap is exceeded.
+Dropping the jit wrapper releases its compiled executable; a later request
+for that signature simply recompiles (a miss + trace, counted as usual).
+
+``LruDict`` is the shared bounded-LRU primitive — the session-level caches
+in ``repro/api`` (tuple sets, routing plans) reuse it rather than re-rolling
+the eviction bookkeeping.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Hashable
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Hashable, Optional
+
 
 import jax
 
 
-class ExecutableCache:
-    """Hashable-key -> jitted callable, with hit/miss/trace counters."""
+class LruDict(OrderedDict):
+    """OrderedDict with LRU semantics and an optional size bound.
 
-    def __init__(self) -> None:
-        self._fns: Dict[Hashable, Callable] = {}
+    ``hit(key)`` returns the value (or None) and refreshes its recency;
+    ``put(key, value)`` inserts — first writer wins if the key raced in —
+    refreshes, evicts past ``max_entries`` (None = unbounded) and returns
+    the kept value.  ``evictions`` counts drops.  Callers provide their own
+    locking and hit/miss counters.
+    """
+
+    def __init__(self, max_entries: Optional[int] = None) -> None:
+        super().__init__()
+        self.max_entries = max_entries
+        self.evictions = 0
+
+    def hit(self, key: Hashable):
+        value = self.get(key)
+        if value is not None:
+            try:
+                self.move_to_end(key)
+            except KeyError:  # concurrently evicted; the value stays valid
+                pass
+        return value
+
+    def put(self, key: Hashable, value):
+        value = self.setdefault(key, value)
+        self.move_to_end(key)
+        while self.max_entries is not None and len(self) > self.max_entries:
+            self.popitem(last=False)
+            self.evictions += 1
+        return value
+
+
+class ExecutableCache:
+    """Hashable-key -> jitted callable, with LRU eviction and hit/miss/
+    trace/eviction counters."""
+
+    def __init__(self, max_entries: Optional[int] = None) -> None:
+        if max_entries is not None and max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self._fns = LruDict(max_entries)
         self.hits = 0
         self.misses = 0
         self.traces = 0
 
+    @property
+    def max_entries(self) -> Optional[int]:
+        return self._fns.max_entries
+
+    @property
+    def evictions(self) -> int:
+        return self._fns.evictions
+
     def get_or_build(self, key: Hashable, builder: Callable[[], Callable]):
         """Return the cached executable for ``key``, building (and jitting)
         it on first use.  ``builder`` returns the un-jitted program."""
-        fn = self._fns.get(key)
+        fn = self._fns.hit(key)
         if fn is not None:
             self.hits += 1
             return fn
@@ -39,20 +95,23 @@ class ExecutableCache:
             self.traces += 1  # runs only under tracing, not per call
             return inner(*args)
 
-        fn = jax.jit(traced)
-        self._fns[key] = fn
-        return fn
+        return self._fns.put(key, jax.jit(traced))
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._fns
 
     def __len__(self) -> int:
         return len(self._fns)
 
     def clear(self) -> None:
         self._fns.clear()
+        self._fns.evictions = 0
         self.hits = self.misses = self.traces = 0
 
     def stats(self) -> Dict[str, int]:
         return {"entries": len(self), "hits": self.hits,
-                "misses": self.misses, "traces": self.traces}
+                "misses": self.misses, "traces": self.traces,
+                "evictions": self.evictions}
 
 
 _GLOBAL_CACHE = ExecutableCache()

@@ -12,16 +12,26 @@ planning:
   4. memoize the jitted executables in an ExecutableCache keyed by
      (signature, N, histogram backend, mesh), so warm queries never retrace.
 
+``run_plans`` returns the group-summed total (one vocab-sized transfer per
+group); ``run_plans_individual`` keeps the per-CN axis on the output so CNs
+from *different* queries can share one batched dispatch and still be
+attributed back to their query — the multi-query path of the session API.
+
 Integer histograms make the batched sum exactly associative: the engine's
 ``all_freqs`` is bit-identical to the sequential per-CN path as long as every
-term's group total fits the histogram dtype (int32 — the same ceiling the
-per-CN device histogram already has; the sequential path accumulates across
-CNs in host int64, so only totals past 2^31 can diverge.  Lifting it needs
-x64-enabled device histograms — see ROADMAP).
+term's group total fits the histogram dtype.  The accumulator is int32 by
+default; with ``jax_enable_x64`` the device programs accumulate volumes and
+histograms in int64 (see core/fct._acc_dtype; int64 weights force the
+fct_count op onto its integer-exact ref path, since the Pallas kernel's
+float32 accumulator is exact only to 2^24).  On the int32 path the engine
+checks each device result for wrap-around (negative totals) and raises
+OverflowError instead of returning silently wrong counts — a best-effort
+check: a total that wraps past 2^32 back to positive, or float32 rounding on
+the TPU kernel path between 2^24 and 2^31, is not detected.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,13 +41,40 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.plan import CNPlan
-from repro.runtime.batch import (PlanSignature, group_plans, plan_signature,
-                                 stack_group)
+from repro.runtime.batch import (PlanSignature, group_plan_indices,
+                                 pad_cn_axis, plan_signature, stack_group)
 from repro.runtime.cache import ExecutableCache, default_cache
 
 
-def _build_batched_fn(sig: PlanSignature, mesh: Mesh, histogram_backend: str):
-    """shard_map program over stacked [N, P, ...] relations -> freq[vocab]."""
+CN_BUCKET_MIN = 4  # floor for bucketing the per-CN-output programs' N axis
+
+
+def _x64_enabled() -> bool:
+    return bool(jax.config.jax_enable_x64)
+
+
+def _check_int32_totals(arr: np.ndarray) -> None:
+    """int32 device totals past 2^31 wrap to negative — fail loudly.
+
+    Best-effort: a double wrap (past 2^32) can land positive again, and the
+    TPU kernel's float32 path rounds before the cast (see fct_count/ops.py).
+    For guaranteed-exact large totals enable ``jax_enable_x64``.
+    """
+    if arr.dtype == np.int32 and bool((arr < 0).any()):
+        raise OverflowError(
+            "int32 term totals overflowed 2^31 during FCT aggregation; "
+            "re-run with jax_enable_x64=True (JAX_ENABLE_X64=1) for int64 "
+            "device histograms")
+
+
+def _build_batched_fn(sig: PlanSignature, mesh: Mesh, histogram_backend: str,
+                      reduce_cns: bool = True):
+    """shard_map program over stacked [N, P, ...] relations.
+
+    ``reduce_cns=True``  -> freq[vocab]     (CN axis summed on device)
+    ``reduce_cns=False`` -> freq[N, vocab]  (per-CN totals, for callers that
+    attribute CNs of one batch to different queries)
+    """
     from repro.core.fct import _device_fct_local
     domains = tuple(d.domain for d in sig.dims)
     shard = P(None, "w")
@@ -52,7 +89,9 @@ def _build_batched_fn(sig: PlanSignature, mesh: Mesh, histogram_backend: str):
                                      histogram_backend=histogram_backend)
 
         hists = jax.vmap(one_cn)(fact, dims)            # [N, vocab]
-        return lax.psum(jnp.sum(hists, axis=0), "w")    # one psum per group
+        if reduce_cns:
+            return lax.psum(jnp.sum(hists, axis=0), "w")  # one psum per group
+        return lax.psum(hists, "w")                     # per-CN, one psum
 
     return shard_map(device_fn, mesh=mesh, in_specs=(spec, [spec] * sig.m),
                      out_specs=P(), check_rep=False)
@@ -75,26 +114,100 @@ class FCTEngine:
         self.batches_run = 0
         self.cns_run = 0
 
+    def _group(self, plans: Sequence[CNPlan]
+               ) -> List[Tuple[PlanSignature, List[int]]]:
+        """Signature groups as plan indices; singletons when unbatched."""
+        if not self.batch:
+            return [(plan_signature(p, self.bucket), [i])
+                    for i, p in enumerate(plans)]
+        return group_plan_indices(plans, self.bucket)
+
+    def _dispatch(self, sig: PlanSignature, group: Sequence[CNPlan],
+                  mesh: Mesh, histogram_backend: str, reduce_cns: bool):
+        """Enqueue one stacked group on the device; returns the LAZY result
+        (jax async dispatch) — callers block via ``_collect``.
+
+        The per-CN-output family additionally rounds the CN axis up to a
+        multiple of CN_BUCKET_MIN (zero-contribution null-plan padding): its
+        group sizes vary with the caller's batch composition, and without
+        rounding every size would compile a fresh program variant.  Padded
+        compute is capped at CN_BUCKET_MIN - 1 null CNs per group.  The
+        summed family keeps exact N (deterministic per request, no padded
+        compute on the latency-critical single-query path).
+        """
+        fact, dims = stack_group(group, sig)
+        kind = "fct_batched" if reduce_cns else "fct_batched_percn"
+        n_stack = len(group)
+        if not reduce_cns and self.bucket:
+            n_stack = -(-n_stack // CN_BUCKET_MIN) * CN_BUCKET_MIN
+            fact, dims = pad_cn_axis(fact, dims, n_stack)
+        key = (kind, sig, n_stack, histogram_backend, mesh, _x64_enabled())
+        fn = self.cache.get_or_build(
+            key, lambda sig=sig: _build_batched_fn(sig, mesh,
+                                                   histogram_backend,
+                                                   reduce_cns=reduce_cns))
+        out = fn(fact, dims)
+        self.batches_run += 1
+        self.cns_run += len(group)
+        return out
+
+    @staticmethod
+    def _collect(lazy) -> np.ndarray:
+        raw = np.asarray(lazy)
+        _check_int32_totals(raw)
+        return raw.astype(np.int64)
+
+    def dispatch_plans(self, plans: Sequence[CNPlan], mesh: Mesh,
+                       histogram_backend: str = "auto",
+                       individual: bool = False):
+        """Async half of a run: enqueue every signature group and return a
+        pending handle ``[(plan_indices, lazy_result), ...]``.
+
+        Device compute of ALL groups proceeds concurrently (and overlaps
+        whatever the host does next); block with ``collect_total`` /
+        ``collect_individual``.  ``individual=True`` keeps the per-CN output
+        axis so CNs of different queries can share a dispatch.
+        """
+        if not plans:
+            raise ValueError("dispatch_plans needs at least one plan")
+        return [(idxs, self._dispatch(sig, [plans[i] for i in idxs], mesh,
+                                      histogram_backend,
+                                      reduce_cns=not individual))
+                for sig, idxs in self._group(plans)]
+
+    def collect_total(self, pending, vocab: int) -> np.ndarray:
+        """Block on an ``individual=False`` handle: total freq[vocab]."""
+        total = np.zeros((vocab,), np.int64)
+        for _, lazy in pending:
+            total += self._collect(lazy)
+        return total
+
+    def collect_individual(self, pending, n_plans: int,
+                           vocab: int) -> np.ndarray:
+        """Block on an ``individual=True`` handle: freq[n_plans, vocab]."""
+        out = np.zeros((n_plans, vocab), np.int64)
+        for idxs, lazy in pending:
+            out[idxs] = self._collect(lazy)[:len(idxs)]  # drop CN-axis pad
+        return out
+
     def run_plans(self, plans: Sequence[CNPlan], mesh: Mesh,
                   histogram_backend: str = "auto") -> np.ndarray:
         """Total freq[vocab] (int64) over all joined-CN plans."""
-        if not plans:
-            raise ValueError("run_plans needs at least one plan")
-        total = np.zeros((plans[0].vocab_size,), np.int64)
-        if self.batch:
-            groups = group_plans(plans, bucket=self.bucket)
-        else:
-            groups = [(plan_signature(p, self.bucket), [p]) for p in plans]
-        for sig, group in groups:
-            fact, dims = stack_group(group, sig)
-            key = ("fct_batched", sig, len(group), histogram_backend, mesh)
-            fn = self.cache.get_or_build(
-                key, lambda sig=sig: _build_batched_fn(sig, mesh,
-                                                       histogram_backend))
-            total += np.asarray(fn(fact, dims), np.int64)
-            self.batches_run += 1
-            self.cns_run += len(group)
-        return total
+        pending = self.dispatch_plans(plans, mesh, histogram_backend)
+        return self.collect_total(pending, plans[0].vocab_size)
+
+    def run_plans_individual(self, plans: Sequence[CNPlan], mesh: Mesh,
+                             histogram_backend: str = "auto") -> np.ndarray:
+        """Per-plan freq[len(plans), vocab] (int64).
+
+        Plans from different queries may share one device dispatch (same
+        signature -> one stacked program); the per-CN output axis lets the
+        caller attribute each histogram to its owning query.
+        """
+        pending = self.dispatch_plans(plans, mesh, histogram_backend,
+                                      individual=True)
+        return self.collect_individual(pending, len(plans),
+                                       plans[0].vocab_size)
 
     def stats(self) -> dict:
         out = self.cache.stats()

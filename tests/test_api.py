@@ -1,0 +1,282 @@
+"""Service API: session/request/response semantics, cross-query batching,
+pipelined submission, LRU eviction and int64-safe totals."""
+import numpy as np
+import pytest
+
+from repro.api import FCTRequest, FCTSession, SessionConfig
+from repro.core.fct import run_fct_query
+from repro.core.star import fct_star
+from repro.data.schema import PAD_ID, JoinEdge, Relation, StarSchema
+from repro.data.tokenizer import HashingTokenizer
+from repro.runtime.cache import ExecutableCache
+from repro.runtime.engine import FCTEngine
+
+from test_engine import _crafted_schema, _dataset
+
+
+@pytest.mark.parametrize("mode", ["uniform", "skew", "round_robin"])
+def test_session_matches_run_fct_query(mode):
+    schema, kws = _dataset("star")
+    engine = FCTEngine()
+    old = run_fct_query(schema, kws, r_max=3, k_terms=10, mode=mode, rho=4,
+                        engine=engine)
+    session = FCTSession(schema, engine=engine)
+    res = session.query(FCTRequest(keywords=tuple(kws), top_k=10, r_max=3,
+                                   mode=mode, rho=4))
+    np.testing.assert_array_equal(res.all_freqs, old.all_freqs)
+    np.testing.assert_array_equal(res.term_ids, old.term_ids)
+    np.testing.assert_array_equal(res.freqs, old.freqs)
+    assert (res.n_cns, res.n_joined_cns) == (old.n_cns, old.n_joined_cns)
+    assert (res.shuffle_rows, res.shuffle_bytes) == (old.shuffle_rows,
+                                                     old.shuffle_bytes)
+    assert res.imbalance == old.imbalance
+
+
+def test_session_warm_query_zero_retraces_and_plan_cache():
+    schema, kws = _crafted_schema(seed=0)
+    engine = FCTEngine()
+    session = FCTSession(schema, engine=engine)
+    req = FCTRequest(keywords=tuple(kws), r_max=3)
+    r1 = session.query(req)
+    assert r1.cold and engine.cache.traces > 0
+    traces = engine.cache.traces
+    r2 = session.query(req)
+    assert engine.cache.traces == traces, "warm query retraced"
+    assert not r2.cold
+    st = session.stats()
+    assert st["plan_hits"] == 1 and st["plan_misses"] == 1
+    assert st["queries_served"] == 2
+    np.testing.assert_array_equal(r1.all_freqs, r2.all_freqs)
+    np.testing.assert_array_equal(r1.all_freqs, fct_star(schema, kws, 3))
+    assert set(r1.timings) == {"plan_ms", "execute_ms", "total_ms"}
+
+
+def _tokenized_schema():
+    tok = HashingTokenizer(256)
+    rng = np.random.default_rng(0)
+    filler = ["red", "green", "blue", "cyan", "teal", "plum"]
+
+    def texts(word, n):
+        rows = [" ".join([word] + list(rng.choice(filler, 2)))
+                for _ in range(n)]
+        return tok.encode_batch(rows, 4)
+
+    dim = Relation("D", {"k": np.arange(8, dtype=np.int32)}, {"k": 8},
+                   texts("alps", 8))
+    fact = Relation("F", {"k": rng.integers(0, 8, 40).astype(np.int32)},
+                    {"k": 8}, texts("bordeaux", 40))
+    schema = StarSchema(fact=fact, dims=[dim],
+                        edges=[JoinEdge("D", "k", "k")], vocab_size=256)
+    return schema, tok
+
+
+def test_string_keywords_resolve_through_tokenizer():
+    schema, tok = _tokenized_schema()
+    session = FCTSession(schema, tokenizer=tok, engine=FCTEngine())
+    r_str = session.query(FCTRequest(("alps", "bordeaux"), r_max=2))
+    ids = session.resolve_keywords(["alps", "bordeaux"])
+    r_ids = session.query(FCTRequest(ids, r_max=2))
+    np.testing.assert_array_equal(r_str.all_freqs, r_ids.all_freqs)
+    assert r_str.terms and all(isinstance(t, str) for t in r_str.terms)
+    assert all(not t.startswith("<") for t, f in r_str.topk())
+    bare = FCTSession(schema, engine=FCTEngine())
+    with pytest.raises(ValueError, match="tokenizer"):
+        bare.query(FCTRequest(("alps",), r_max=2))
+
+
+def test_query_batch_matches_sequential_and_shares_signatures():
+    schema, kws = _crafted_schema(seed=3)
+    engine = FCTEngine()
+    session = FCTSession(schema, engine=engine)
+    r1 = FCTRequest(keywords=tuple(kws), r_max=3)
+    r2 = FCTRequest(keywords=tuple(kws), r_max=3, salt=1)
+    b0 = engine.batches_run
+    seq = [session.query(r1), session.query(r2)]
+    seq_dispatches = engine.batches_run - b0
+    b0 = engine.batches_run
+    batch = session.query_batch([r1, r2])
+    batch_dispatches = engine.batches_run - b0
+    for got, want in zip(batch, seq):
+        np.testing.assert_array_equal(got.all_freqs, want.all_freqs)
+        np.testing.assert_array_equal(got.term_ids, want.term_ids)
+    # same-signature CNs of DIFFERENT queries rode shared dispatches
+    assert batch_dispatches < seq_dispatches
+    # a second batch of the same shapes retraces nothing
+    traces = engine.cache.traces
+    batch2 = session.query_batch([r2, r1])
+    assert engine.cache.traces == traces, "same-shape batch retraced"
+    np.testing.assert_array_equal(batch2[1].all_freqs, batch[0].all_freqs)
+
+
+def test_batch_sizes_in_one_bucket_share_executables():
+    # dynamic-batching windows vary run to run; the per-CN program family
+    # buckets its CN axis (null-plan padding) so window sizes 3 and 4 (and
+    # any same-bucket sizes) replay ONE compiled program, bit-exactly
+    schema, kws = _crafted_schema(seed=0)
+    engine = FCTEngine()
+    session = FCTSession(schema, engine=engine)
+    reqs = [FCTRequest(keywords=tuple(kws), r_max=3, salt=i)
+            for i in range(4)]
+    four = session.query_batch(reqs)
+    traces = engine.cache.traces
+    three = session.query_batch(reqs[:3])
+    assert engine.cache.traces == traces, "same-bucket window retraced"
+    for got, want in zip(three, four):
+        np.testing.assert_array_equal(got.all_freqs, want.all_freqs)
+
+
+def test_query_batch_handles_empty_and_single():
+    schema, kws = _crafted_schema(seed=0)
+    session = FCTSession(schema, engine=FCTEngine())
+    assert session.query_batch([]) == []
+    req = FCTRequest(keywords=tuple(kws), r_max=3)
+    (only,) = session.query_batch([req])
+    np.testing.assert_array_equal(only.all_freqs,
+                                  session.query(req).all_freqs)
+
+
+def test_submit_preserves_order_and_propagates_exceptions():
+    schema, kws = _crafted_schema(seed=0)
+    session = FCTSession(schema, engine=FCTEngine())
+    done_order = []
+    futs = []
+    for i in range(3):
+        f = session.submit(FCTRequest(keywords=tuple(kws), r_max=3, salt=i))
+        f.add_done_callback(lambda fut, i=i: done_order.append(i))
+        futs.append(f)
+    bad = session.submit(FCTRequest(keywords=("needs-a-tokenizer",), r_max=3))
+    after = session.submit(FCTRequest(keywords=tuple(kws), r_max=3))
+    responses = [f.result(timeout=300) for f in futs]
+    with pytest.raises(ValueError, match="tokenizer"):
+        bad.result(timeout=300)
+    resp_after = after.result(timeout=300)  # failures don't wedge the stream
+    assert done_order == [0, 1, 2], "futures resolved out of order"
+    sync = session.query(FCTRequest(keywords=tuple(kws), r_max=3))
+    np.testing.assert_array_equal(resp_after.all_freqs, sync.all_freqs)
+    np.testing.assert_array_equal(responses[0].all_freqs, sync.all_freqs)
+    session.close()
+    session.submit(FCTRequest(keywords=tuple(kws), r_max=3)).result(
+        timeout=300)  # close() restarts on next submit
+    session.close()
+
+
+def test_executable_cache_lru_eviction():
+    import jax.numpy as jnp
+    cache = ExecutableCache(max_entries=2)
+    x = jnp.zeros((2,))
+    cache.get_or_build("a", lambda: lambda v: v + 1)(x)
+    cache.get_or_build("b", lambda: lambda v: v + 2)(x)
+    cache.get_or_build("a", lambda: lambda v: v + 1)  # refresh a's recency
+    cache.get_or_build("c", lambda: lambda v: v + 3)  # evicts b (LRU)
+    assert len(cache) == 2 and cache.evictions == 1
+    assert "b" not in cache and "a" in cache and "c" in cache
+    misses = cache.misses
+    cache.get_or_build("b", lambda: lambda v: v + 2)  # rebuild after evict
+    assert cache.misses == misses + 1
+    assert cache.stats()["evictions"] == 2
+    with pytest.raises(ValueError):
+        ExecutableCache(max_entries=0)
+
+
+def test_session_plumbs_cache_cap_through_config():
+    schema, kws = _crafted_schema(seed=0)
+    session = FCTSession(schema, config=SessionConfig(cache_max_entries=1))
+    assert session.engine.cache.max_entries == 1
+    res = session.query(FCTRequest(keywords=tuple(kws), r_max=3))
+    # several signatures squeezed through a 1-entry cache must evict
+    assert session.engine.cache.stats()["evictions"] > 0
+    np.testing.assert_array_equal(res.all_freqs, fct_star(schema, kws, 3))
+    # the cap applies to a session-owned engine only — an explicit engine
+    # plus a cap would silently ignore the cap, so it must be rejected
+    with pytest.raises(ValueError, match="cache_max_entries"):
+        FCTSession(schema, engine=FCTEngine(),
+                   config=SessionConfig(cache_max_entries=1))
+
+
+def test_tuple_set_cache_is_lru_bounded():
+    schema, kws = _crafted_schema(seed=0)
+    session = FCTSession(schema, engine=FCTEngine(),
+                         config=SessionConfig(tuple_set_cache_size=2,
+                                              plan_cache_size=0))
+    a, b = kws
+    for subset in [(a,), (b,), (a, b)]:  # 3 distinct keyword sets
+        session.query(FCTRequest(keywords=subset, r_max=2))
+    st = session.stats()
+    assert st["tuple_set_entries"] == 2 and st["tuple_set_misses"] == 3
+    session.query(FCTRequest(keywords=(a,), r_max=2))  # evicted: rebuilds
+    assert session.stats()["tuple_set_misses"] == 4
+
+
+def test_cancelled_future_does_not_wedge_pipeline():
+    schema, kws = _crafted_schema(seed=0)
+    session = FCTSession(schema, engine=FCTEngine())
+    req = FCTRequest(keywords=tuple(kws), r_max=3)
+    session.query(req)  # warm, so pipelined work below is quick
+    futs = [session.submit(FCTRequest(keywords=tuple(kws), r_max=3, salt=i))
+            for i in range(4)]
+    futs[1].cancel()  # may or may not win the race with the finalizer
+    for i in (0, 2, 3):
+        assert futs[i].result(timeout=300) is not None
+    # the finalizer survived: later submissions still resolve
+    after = session.submit(req).result(timeout=300)
+    np.testing.assert_array_equal(after.all_freqs,
+                                  session.query(req).all_freqs)
+    session.close()
+
+
+def _overflow_schema(n=50000):
+    """One joined CN F^{}~D0^{A}~D1^{B} whose fact-tuple volume is n*n
+    (> 2^31 for n=50000): every dim row joins the single fact row."""
+    VOCAB, KWA, KWB, TOKEN = 32, 28, 29, 30
+
+    def text(rows, fill):
+        t = np.full((rows, 2), PAD_ID, np.int32)
+        t[:, 0] = fill
+        return t
+
+    d0 = Relation("D0", {"k0": np.zeros(n, np.int32)}, {"k0": 4},
+                  text(n, KWA))
+    d1 = Relation("D1", {"k1": np.zeros(n, np.int32)}, {"k1": 4},
+                  text(n, KWB))
+    fact = Relation("F", {"k0": np.zeros(1, np.int32),
+                          "k1": np.zeros(1, np.int32)},
+                    {"k0": 4, "k1": 4}, text(1, TOKEN))
+    schema = StarSchema(fact=fact, dims=[d0, d1],
+                        edges=[JoinEdge("D0", "k0", "k0"),
+                               JoinEdge("D1", "k1", "k1")],
+                        vocab_size=VOCAB)
+    return schema, (KWA, KWB), TOKEN
+
+
+def test_int32_overflow_raises_instead_of_wrapping():
+    schema, kws, _ = _overflow_schema()
+    session = FCTSession(schema, engine=FCTEngine())
+    with pytest.raises(OverflowError, match="jax_enable_x64"):
+        session.query(FCTRequest(keywords=kws, r_max=3))
+
+
+def test_x64_device_totals_are_exact():
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    try:
+        schema, kws, token = _overflow_schema()
+        session = FCTSession(schema, engine=FCTEngine())
+        res = session.query(FCTRequest(keywords=kws, r_max=3, top_k=3))
+        n = 50000
+        assert int(res.all_freqs[token]) == n * n  # 2.5e9 > 2^31, exact
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def test_request_validation():
+    with pytest.raises(ValueError, match="keyword"):
+        FCTRequest(keywords=())
+    with pytest.raises(ValueError, match="mode"):
+        FCTRequest(keywords=(1,), mode="bogus")
+    with pytest.raises(ValueError, match="top_k"):
+        FCTRequest(keywords=(1,), top_k=0)
+    with pytest.raises(ValueError, match="r_max"):
+        FCTRequest(keywords=(1,), r_max=0)
+    req = FCTRequest(keywords=[1, 2])
+    assert req.keywords == (1, 2)  # normalized to a hashable tuple
+    assert hash(req) == hash(FCTRequest(keywords=(1, 2)))
