@@ -30,10 +30,12 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (common, kernel_micro, multi_query, response_time,
-                            shares_comm, shuffle_size, skew_adjust)
+                            serving_load, shares_comm, shuffle_size,
+                            skew_adjust)
     mods = {
         "response_time": response_time,
         "multi_query": multi_query,
+        "serving_load": serving_load,
         "shuffle_size": shuffle_size,
         "skew_adjust": skew_adjust,
         "shares_comm": shares_comm,

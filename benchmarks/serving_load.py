@@ -1,0 +1,274 @@
+"""Multi-tenant serving-load benchmark: gateway vs sequential sessions.
+
+The serving regime at gateway level (ROADMAP north star): TWO loaded
+datasets behind one `repro/serve` Gateway, hammered by a bursty stream of
+highly repetitive keyword queries — the paper's online refinement workload
+at multi-user traffic.  Three measured phases over the same warm stream:
+
+  sequential      — every request answered by ``session.query()`` on its
+                    tenant's session, in arrival order: the pre-gateway
+                    baseline (no cross-user batching, no result caching)
+  gateway_batched — the stream submitted through the gateway with the
+                    result cache DISABLED (TTL 0): isolates time-windowed
+                    dynamic batching — same-window queries share stacked
+                    device dispatches (records mean batch occupancy)
+  gateway_cached  — the same stream with a warm result cache: repeats are
+                    answered from memoized full histograms; the benchmark
+                    asserts the engine-dispatch delta of the fully-cached
+                    replay is ZERO
+
+Bursts interleave both tenants, so the run also demonstrates two schemas
+served concurrently from one gateway with isolated per-tenant executable
+caches (partitioned budgets, private engines).
+
+The script self-checks the serving invariants (occupancy >= 2 under a 1ms
+window, zero-dispatch cache hits, tenant isolation) so CI fails on batching
+regressions: ``python benchmarks/serving_load.py --quick``.  Run directly
+it merges its records into BENCH_fct.json; under ``benchmarks/run.py
+serving_load --json`` it emits through the shared driver.
+"""
+from __future__ import annotations
+
+import os
+import statistics
+import sys
+import time
+
+# allow `python benchmarks/serving_load.py` from anywhere (run.py does the
+# same dance): repo root for `benchmarks.*`, src/ for `repro.*`
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import numpy as np
+
+from benchmarks.common import emit, make_dataset
+from repro.api import FCTRequest
+from repro.serve import Gateway, GatewayConfig, SchemaRegistry
+
+WINDOW_MS = 1.0
+BURST_SIZES = (4, 8, 6)     # queries per tenant per burst (cycled)
+
+
+def _request_pool(kws):
+    """6 distinct request shapes per tenant: mixed salts/modes/r_max share
+    executables but are distinct plans/results — refinement-like variety."""
+    kws = tuple(kws)
+    return [
+        FCTRequest(kws, r_max=3),
+        FCTRequest(kws, r_max=3, salt=1),
+        FCTRequest(kws, r_max=3, mode="skew"),
+        FCTRequest(kws[:2], r_max=3),
+        FCTRequest(kws[:2], r_max=3, salt=1),
+        FCTRequest(kws, r_max=2),
+    ]
+
+
+def _bursty_stream(pools, n_bursts, rng):
+    """[(tenant, request), ...] per burst: each burst mixes BOTH tenants
+    (concurrent multi-schema serving) and repeats pool entries (refinement
+    traffic re-issues whole queries)."""
+    bursts = []
+    tenants = list(pools)
+    for b in range(n_bursts):
+        burst = []
+        size = BURST_SIZES[b % len(BURST_SIZES)]
+        for tenant in tenants:
+            pool = pools[tenant]
+            picks = rng.integers(0, len(pool), size=size)
+            burst.extend((tenant, pool[i]) for i in picks)
+        bursts.append(burst)
+    return bursts
+
+
+def _drain(futs):
+    return [f.result(timeout=600) for f in futs]
+
+
+def run(quick: bool = False) -> None:
+    n_bursts = 4 if quick else 12
+    rng = np.random.default_rng(7)
+    schema_a, kws_a = make_dataset(scale=0.4, query_type="star", seed=5)
+    schema_b, kws_b = make_dataset(scale=0.4, query_type="star", seed=11)
+
+    registry = SchemaRegistry(total_cache_entries=64, total_plan_entries=64,
+                              total_tuple_set_entries=32)
+    registry.register("alpha", schema_a)
+    registry.register("beta", schema_b)
+    pools = {"alpha": _request_pool(kws_a), "beta": _request_pool(kws_b)}
+    bursts = _bursty_stream(pools, n_bursts, rng)
+    n_queries = sum(len(b) for b in bursts)
+
+    # two gateway configurations over ONE registry (shared sessions):
+    # TTL 0 isolates dynamic batching; the second adds result caching
+    gateway = Gateway(registry, GatewayConfig(
+        batch_window_ms=WINDOW_MS, result_cache_ttl_s=0, max_inflight=64))
+    sessions = {n: registry.session(n) for n in ("alpha", "beta")}
+
+    # tenant isolation (acceptance c): private engines, partitioned budgets
+    assert sessions["alpha"].engine is not sessions["beta"].engine, \
+        "tenants share an engine"
+    assert all(s.engine.cache.max_entries == 32 for s in sessions.values()), \
+        "cache budget not partitioned across tenants"
+
+    # -- warmup: compile every program family both paths will replay.
+    # Window compositions decide the per-CN programs' stacked-axis buckets,
+    # so the gateway warmup replays the REAL burst stream (twice) — per-pool
+    # warmup alone would leave burst-sized buckets to compile mid-measurement
+    for _ in range(2):
+        for burst in bursts:
+            _drain([gateway.submit(t, r) for t, r in burst])
+        for tenant, pool in pools.items():
+            for r in pool:
+                sessions[tenant].query(r)
+
+    def engine_batches():
+        return sum(s.engine.batches_run for s in sessions.values())
+
+    rounds = 3  # min over rounds: a straggler compile (window compositions
+    #             are timing-dependent) must not read as steady-state cost
+
+    # -- phase 1: sequential baseline (per-tenant sessions, no gateway) -----
+    seq_us = float("inf")
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        for burst in bursts:
+            for tenant, req in burst:
+                sessions[tenant].query(req)
+        seq_us = min(seq_us, (time.perf_counter() - t0) * 1e6)
+
+    # -- phase 2: gateway, dynamic batching only (result cache disabled) ----
+    b0 = engine_batches()
+    batched_us = float("inf")
+    round_occupancy = []
+    for _ in range(rounds):
+        pre = {t: dict(gateway.stats()[t]) for t in pools}
+        t0 = time.perf_counter()
+        for burst in bursts:
+            _drain([gateway.submit(t, r) for t, r in burst])
+        batched_us = min(batched_us, (time.perf_counter() - t0) * 1e6)
+        occ = {}
+        for tenant in pools:
+            st = gateway.stats()[tenant]
+            queries = st["queries_batched"] - pre[tenant]["queries_batched"]
+            windows = st["windows_flushed"] - pre[tenant]["windows_flushed"]
+            occ[tenant] = round(queries / max(windows, 1), 3)
+        round_occupancy.append(occ)
+    batched_dispatches = (engine_batches() - b0) // rounds
+    occupancy = {t: round(statistics.mean(r[t] for r in round_occupancy), 3)
+                 for t in pools}
+    mean_occupancy = statistics.mean(occupancy.values())
+    gateway.close()
+    # CI-gate on the BEST round: occupancy under a 1ms window nominally sits
+    # at burst size (~6), but a descheduled shared runner can split one
+    # round's bursts across windows — that is scheduler noise, not a
+    # batching regression, and must not fail the build
+    best_occupancy = max(statistics.mean(r.values())
+                         for r in round_occupancy)
+    assert best_occupancy >= 2.0, (
+        f"dynamic batching regressed: per-round window occupancy "
+        f"{round_occupancy} < 2 queries/dispatch in every round under a "
+        f"{WINDOW_MS}ms window")
+
+    # -- phase 3: gateway with a warm result cache --------------------------
+    gateway = Gateway(registry, GatewayConfig(
+        batch_window_ms=WINDOW_MS, result_cache_ttl_s=3600.0,
+        max_inflight=64))
+    for burst in bursts:                  # warm the cache (one miss each)
+        _drain([gateway.submit(t, r) for t, r in burst])
+    b0 = engine_batches()
+    cached_us = float("inf")
+    cached_hits = 0
+    for _ in range(rounds):
+        responses = []
+        t0 = time.perf_counter()
+        for burst in bursts:
+            responses.extend(_drain([gateway.submit(t, r) for t, r in burst]))
+        cached_us = min(cached_us, (time.perf_counter() - t0) * 1e6)
+        assert all(r.cache_hit for r in responses), "cached replay missed"
+        cached_hits += sum(r.cache_hit for r in responses)
+    cached_dispatch_delta = engine_batches() - b0
+    assert cached_dispatch_delta == 0, (
+        f"result-cache hits dispatched {cached_dispatch_delta} device "
+        f"batches (must be 0)")
+    # cached results are bit-identical to engine results
+    check = bursts[0][0]
+    np.testing.assert_array_equal(
+        gateway.query(check[0], check[1]).all_freqs,
+        sessions[check[0]].query(check[1]).all_freqs)
+    hit_rate = {}
+    for tenant in pools:
+        st = gateway.stats()[tenant]
+        hit_rate[tenant] = round(
+            st["result_hits"] / max(st["result_hits"] + st["result_misses"],
+                                    1), 3)
+
+    gateway.close()
+    registry.close()
+
+    qps = {name: round(n_queries / (us / 1e6), 1) for name, us in
+           [("sequential", seq_us), ("gateway_batched", batched_us),
+            ("gateway_cached", cached_us)]}
+    per_q = {"sequential": seq_us / n_queries,
+             "gateway_batched": batched_us / n_queries,
+             "gateway_cached": cached_us / n_queries}
+    emit(f"fct_serving_sequential/2tenants/{n_queries}q",
+         per_q["sequential"],
+         f"qps={qps['sequential']} bursts={n_bursts}",
+         kind="serving_load", strategy="sequential", n_queries=n_queries,
+         qps=qps["sequential"])
+    emit(f"fct_serving_gateway_batched/2tenants/{n_queries}q",
+         per_q["gateway_batched"],
+         f"qps={qps['gateway_batched']} occupancy="
+         f"{round(mean_occupancy, 2)}q/window dispatches="
+         f"{batched_dispatches} (single-device backends serialize stacked "
+         f"CNs; the saved dispatches pay off on multi-device meshes)",
+         kind="serving_load", strategy="gateway_batched",
+         n_queries=n_queries, qps=qps["gateway_batched"],
+         batch_occupancy=round(mean_occupancy, 3),
+         occupancy_per_tenant=occupancy, dispatches=batched_dispatches,
+         window_ms=WINDOW_MS,
+         speedup=round(per_q["sequential"] / per_q["gateway_batched"], 2))
+    emit(f"fct_serving_gateway_cached/2tenants/{n_queries}q",
+         per_q["gateway_cached"],
+         f"qps={qps['gateway_cached']} hit_rate={hit_rate} "
+         f"engine_delta={cached_dispatch_delta}",
+         kind="serving_load", strategy="gateway_cached",
+         n_queries=n_queries, qps=qps["gateway_cached"],
+         hit_rate=hit_rate, engine_dispatch_delta=cached_dispatch_delta,
+         speedup=round(per_q["sequential"] / per_q["gateway_cached"], 2))
+
+
+def _merge_into_bench_json(path: str = None) -> None:
+    """Direct-run mode: replace this benchmark's records in the repo's
+    BENCH_fct.json (run.py owns the file when running the full suite)."""
+    import json
+    from benchmarks.common import RECORDS
+    if path is None:  # anchor to the repo root, not the caller's cwd
+        path = os.path.join(_ROOT, "BENCH_fct.json")
+    payload = {"meta": {}, "benchmarks": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    kept = [r for r in payload.get("benchmarks", [])
+            if not r["name"].startswith("fct_serving_")]
+    payload["benchmarks"] = kept + RECORDS
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# merged {len(RECORDS)} serving records into {path}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI mode: fewer bursts, same assertions")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip merging records into BENCH_fct.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=args.quick)
+    if not args.no_json:
+        _merge_into_bench_json()

@@ -58,7 +58,9 @@ class FCTResponse:
     top-k) and ``total_ms``.  ``engine_stats`` is the *delta* of the engine
     counters attributable to this query (for ``query_batch``, to the whole
     batch — the dispatch is shared); ``cold`` is True iff that delta includes
-    at least one retrace.
+    at least one retrace.  ``cache_hit`` marks responses the serving
+    gateway's :class:`repro.serve.ResultCache` answered without touching the
+    engine (top-k re-sliced from the memoized full histogram).
     """
 
     terms: List[str]
@@ -74,6 +76,7 @@ class FCTResponse:
     engine_stats: Dict[str, int]
     cold: bool
     request: Optional[FCTRequest] = None
+    cache_hit: bool = False
 
     def topk(self) -> List[Tuple[str, int]]:
         """(term, freq) pairs with zero-frequency tail dropped."""

@@ -41,7 +41,7 @@ from repro.data.schema import PAD_ID, StarSchema, tokens_histogram
 from repro.runtime.cache import LruDict
 
 _ENGINE_COUNTERS = ("hits", "misses", "traces", "evictions",
-                    "batches_run", "cns_run")
+                    "batches_run", "cns_run", "stack_hits", "stack_misses")
 
 
 @dataclasses.dataclass
@@ -70,6 +70,11 @@ class _PlannedQuery:
     shuffle_bytes: int
     imbalance: float
     plan_ms: float
+    # signature -> padded/stacked host arrays, filled by the engine on the
+    # first summed-family dispatch; plan-cache hits share this dict (via
+    # dataclasses.replace) so warm dispatches skip the stack_group memcpy
+    # (~2x plan-cache memory, see ROADMAP stacked-array caching)
+    stacks: Dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -302,9 +307,15 @@ class FCTSession:
             before = self._engine_snapshot()
             pending = None
             if all_plans:
+                # single-query (summed) dispatches have a deterministic
+                # signature -> group mapping, so the planned query's stack
+                # dict can memoize the padded host arrays across warm calls;
+                # multi-query groups mix CNs of several requests and must
+                # re-stack per batch composition
                 pending = self.engine.dispatch_plans(
                     all_plans, self.mesh, self.config.histogram_backend,
-                    individual=individual)
+                    individual=individual,
+                    stack_cache=None if individual else planned[0].stacks)
             delta = self._engine_delta(before)
         dispatch_ms = (time.perf_counter() - t0) * 1e3
         return _InFlight(planned=planned, owners=np.asarray(owners, np.int64),

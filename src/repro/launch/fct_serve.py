@@ -1,19 +1,27 @@
-"""FCT serving loop: a long-lived FCTSession answering streamed queries.
+"""FCT serving loop: a multi-tenant Gateway answering streamed queries.
 
-Reads whitespace-separated keyword queries (one per line) from stdin or a
-file, streams responses through the session's pipelined ``submit`` path
-(printing each response as soon as its future resolves, in FIFO order) and
-reports per-query latency, cold/warm status and cache statistics — the
-serving demo for the paper's online query-refinement workload.
+Reads keyword queries (one per line) from stdin or a file and streams them
+through the serving gateway (`repro/serve`): a SchemaRegistry of named
+datasets, a per-tenant ~1ms dynamic-batching window (same-window queries
+share stacked device dispatches) and a per-tenant TTL result cache (whole
+repeated queries are answered with zero engine dispatches).  Responses
+print as soon as their future resolves, with per-query latency and
+cold / warm / cached status — the serving demo for the paper's online
+query-refinement workload at multi-user traffic.
 
-    # interactive / piped
+Two schemas are registered: ``demo`` (the quickstart star database, the
+default tenant) and ``tpch`` (a TPC-H-like dataset, generated lazily on
+first query).  Address a tenant with a ``schema:`` prefix:
+
+    # interactive / piped — default schema
     echo "alps bordeaux" | PYTHONPATH=src python -m repro.launch.fct_serve
 
-    # from a file, with a bounded executable cache
-    PYTHONPATH=src python -m repro.launch.fct_serve --queries q.txt \
-        --cache-max-entries 64
+    # multi-schema syntax, tuned gateway
+    printf 'demo: alps bordeaux\\ntpch: green sky\\n' | \\
+        PYTHONPATH=src python -m repro.launch.fct_serve \\
+            --batch-window-ms 2 --result-cache-ttl 30 --max-inflight 16
 
-    # self-checking smoke run (used by CI)
+    # self-checking multi-schema smoke run (used by CI)
     PYTHONPATH=src python -m repro.launch.fct_serve --smoke
 """
 from __future__ import annotations
@@ -22,16 +30,34 @@ import argparse
 import sys
 import time
 
-MAX_INFLIGHT = 32  # backpressure: block on the oldest future past this
+DEFAULT_SCHEMA = "demo"
 
+# (schema, query) pairs: repeats within and across bursts exercise the
+# result cache; both tenants in one stream exercise multi-schema serving
 SMOKE_QUERIES = [
-    "alps bordeaux",            # compiles this shape family
-    "alps bordeaux",            # repeat: plan cache + executable reuse
-    "polished azure",           # same shapes, different keywords
-    "alps express priority",    # 3-keyword query: new CN family
-    "bordeaux fragile",
-    "alps bordeaux",
+    "demo: alps bordeaux",          # compiles this shape family
+    "demo: alps bordeaux",          # repeat: result cache (after 1st burst)
+    "demo: polished azure",         # same shapes, different keywords
+    "demo: alps express priority",  # 3-keyword query: new CN family
+    "tpch: green sky",              # second tenant (lazily generated)
+    "tpch: blue river stone",
+    "demo: bordeaux fragile",
+    "tpch: green sky",
 ]
+
+
+def parse_line(line: str, default_schema: str, known=None):
+    """``[schema:] kw1 kw2 ...`` -> (schema, [keywords]).
+
+    Only a REGISTERED tenant name (when ``known`` is given) is treated as a
+    prefix, so a plain keyword that happens to contain a colon still routes
+    to the default schema instead of being rejected as an unknown tenant.
+    """
+    schema, sep, rest = line.partition(":")
+    schema = schema.strip()
+    if sep and " " not in schema and (known is None or schema in known):
+        return schema, rest.split()
+    return default_schema, line.split()
 
 
 def main() -> None:
@@ -39,63 +65,90 @@ def main() -> None:
     ap.add_argument("--queries", default=None, metavar="PATH",
                     help="read queries from a file instead of stdin")
     ap.add_argument("--smoke", action="store_true",
-                    help="run a canned query stream and self-check (CI)")
-    ap.add_argument("--sync", action="store_true",
-                    help="serve with sync query() instead of the pipeline")
+                    help="run a canned multi-schema stream and self-check "
+                         "(CI): batching, result caching, tenant isolation")
     ap.add_argument("--top-k", type=int, default=5)
     ap.add_argument("--r-max", type=int, default=4)
     ap.add_argument("--mode", default="uniform",
                     choices=["uniform", "skew", "round_robin"])
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--cache-max-entries", type=int, default=None,
-                    help="LRU cap on the session's executable cache")
+                    help="TOTAL executable-cache budget, partitioned across "
+                         "tenants (each gets its own LRU-capped engine)")
+    ap.add_argument("--batch-window-ms", type=float, default=1.0,
+                    help="dynamic-batching window per tenant (0 = flush "
+                         "as fast as possible)")
+    ap.add_argument("--result-cache-ttl", type=float, default=60.0,
+                    metavar="S", help="result-cache TTL in seconds "
+                    "(0 disables result caching)")
+    ap.add_argument("--max-inflight", type=int, default=32,
+                    help="gateway backpressure: max uncached requests in "
+                         "flight before submit() blocks")
     args = ap.parse_args()
 
     from examples.quickstart import TOK, build_db
-    from repro.api import FCTRequest, FCTSession, SessionConfig
-    from repro.runtime.engine import FCTEngine
+    from repro.api import FCTRequest
+    from repro.data.tpch import TpchConfig
+    from repro.serve import Gateway, GatewayConfig, SchemaRegistry
 
     t0 = time.perf_counter()
-    schema = build_db(n_fact=int(2000 * args.scale))
-    # with a cache cap the session must own its engine (the cap applies to
-    # a session-owned cache); otherwise isolate a fresh engine for the demo
-    engine = None if args.cache_max_entries is not None else FCTEngine()
-    session = FCTSession(
-        schema, tokenizer=TOK, engine=engine,
-        config=SessionConfig(cache_max_entries=args.cache_max_entries))
-    print(f"# loaded {schema.fact.rows}-row star schema in "
-          f"{(time.perf_counter() - t0) * 1e3:.0f}ms — serving "
-          f"({'sync' if args.sync else 'pipelined'} mode)", flush=True)
+    # the smoke run asserts tenant isolation, which needs per-tenant engines
+    # — give it a real (partitioned) executable budget unless one was set
+    cache_total = args.cache_max_entries
+    if args.smoke and cache_total is None:
+        cache_total = 64
+    registry = SchemaRegistry(total_cache_entries=cache_total)
+    registry.register("demo", build_db(n_fact=int(2000 * args.scale)),
+                      tokenizer=TOK)
+    registry.register("tpch", TpchConfig(scale=0.25 * args.scale),
+                      tokenizer=TOK)
+    # the smoke run asserts on window occupancy and on second-stream cache
+    # hits: widen the 1ms window default so a descheduled CI runner cannot
+    # split the canned burst, and floor the TTL so first-stream compile time
+    # cannot expire the entries the self-check relies on
+    window_ms = max(args.batch_window_ms, 5.0) if args.smoke \
+        else args.batch_window_ms
+    result_ttl = max(args.result_cache_ttl, 3600.0) if args.smoke \
+        else args.result_cache_ttl
+    gateway = Gateway(registry, GatewayConfig(
+        batch_window_ms=window_ms,
+        result_cache_ttl_s=result_ttl,
+        max_inflight=args.max_inflight))
+    print(f"# gateway up in {(time.perf_counter() - t0) * 1e3:.0f}ms — "
+          f"tenants {registry.names()} (default {DEFAULT_SCHEMA!r}), "
+          f"window {window_ms}ms, result TTL {result_ttl}s, "
+          f"max in-flight {args.max_inflight}", flush=True)
 
-    def make_request(line: str):
-        return FCTRequest(keywords=tuple(line.split()), top_k=args.top_k,
+    def make_request(words):
+        return FCTRequest(keywords=tuple(words), top_k=args.top_k,
                           r_max=args.r_max, mode=args.mode)
 
-    def report(idx, line, resp, wall_ms):
-        state = "cold" if resp.cold else "warm"
+    def report(idx, schema, line, resp, wall_ms):
+        state = ("cached" if resp.cache_hit
+                 else "cold" if resp.cold else "warm")
         terms = " ".join(f"{w}({c})" for w, c in resp.topk())
-        print(f"[{idx}] {line!r}: {wall_ms:.1f}ms ({state}, "
-              f"plan {resp.timings['plan_ms']:.1f}ms + exec "
-              f"{resp.timings['execute_ms']:.1f}ms) "
+        print(f"[{idx}] {schema}: {line!r}: {wall_ms:.1f}ms ({state}) "
               f"cns={resp.n_joined_cns} -> {terms}", flush=True)
 
     def serve(lines, collect=False):
-        """Stream queries through the session; responses print as soon as
-        they resolve (futures complete in FIFO order).  Returns the
-        responses when ``collect`` (smoke mode only — they hold full
-        frequency vectors, so an open-ended stream must not retain them)."""
+        """Submit queries as they arrive; print responses as their futures
+        resolve (FIFO per submission order).  The gateway enforces the
+        in-flight bound — a burst past --max-inflight blocks here until a
+        window flushes.  Returns the responses when ``collect`` (smoke only
+        — they hold full frequency vectors, so an open-ended stream must
+        not retain them)."""
         n = 0
-        inflight = []  # [(idx, line, future, t_submit)]
+        inflight = []  # [(idx, schema, line, future, t_submit)]
         out = [] if collect else None
 
         def pop_oldest():
-            idx, line, fut, t1 = inflight.pop(0)
+            idx, schema, line, fut, t1 = inflight.pop(0)
             try:
                 resp = fut.result()
             except Exception as e:
-                print(f"[{idx}] {line!r}: failed ({e})", flush=True)
+                print(f"[{idx}] {schema}: {line!r}: failed ({e})", flush=True)
                 return
-            report(idx, line, resp, (time.perf_counter() - t1) * 1e3)
+            report(idx, schema, line, resp, (time.perf_counter() - t1) * 1e3)
             if out is not None:
                 out.append(resp)
 
@@ -103,25 +156,23 @@ def main() -> None:
             line = line.strip()
             if not line or line.startswith("#"):
                 continue
+            schema, words = parse_line(line, DEFAULT_SCHEMA,
+                                       registry.names())
             try:
-                req = make_request(line)
-            except ValueError as e:
+                fut = gateway.submit(schema, make_request(words))
+            except (ValueError, KeyError) as e:
                 print(f"[{n}] {line!r}: rejected ({e})", flush=True)
                 n += 1
                 continue
-            if args.sync:
-                t1 = time.perf_counter()
-                resp = session.query(req)
-                report(n, line, resp, (time.perf_counter() - t1) * 1e3)
-                if out is not None:
-                    out.append(resp)
-            else:
-                inflight.append((n, line, session.submit(req),
-                                 time.perf_counter()))
-                while inflight and inflight[0][2].done():  # stream results
-                    pop_oldest()
-                while len(inflight) >= MAX_INFLIGHT:       # backpressure
-                    pop_oldest()
+            inflight.append((n, schema, " ".join(words), fut,
+                             time.perf_counter()))
+            while inflight and inflight[0][3].done():  # stream results
+                pop_oldest()
+            # bound the print queue too: cache hits bypass the gateway's
+            # semaphore, so a fast cached stream behind one slow cold head
+            # would otherwise retain unbounded full-histogram responses
+            while len(inflight) >= args.max_inflight:
+                pop_oldest()
             n += 1
         while inflight:
             pop_oldest()
@@ -137,29 +188,54 @@ def main() -> None:
 
     if args.smoke:
         import numpy as np
-        # a second identical stream must be answered from warm caches with
-        # identical results, in FIFO order
+        # a second identical stream must be answered entirely from the
+        # result caches: bit-identical histograms, zero engine dispatches
+        sessions = {name: registry.session(name) for name in ("demo", "tpch")}
+        before = {n: s.engine.batches_run for n, s in sessions.items()}
         second = serve(SMOKE_QUERIES, collect=True)
         assert len(first) == len(SMOKE_QUERIES) == len(second), \
             "lost responses"
         for a, b in zip(first, second):
             np.testing.assert_array_equal(a.all_freqs, b.all_freqs)
-        # sync repeats are deterministically warm (same executables + plans)
-        session.query(make_request(SMOKE_QUERIES[0]))
-        warm = session.query(make_request(SMOKE_QUERIES[0]))
-        assert warm.cold is False, "sync repeat query retraced"
-        st = session.stats()
-        assert st["plan_hits"] >= len(SMOKE_QUERIES), "plan cache unused"
-        assert st["hits"] > 0, "executable cache unused"
+        assert all(r.cache_hit for r in second), \
+            "second stream missed the result cache"
+        assert all(s.engine.batches_run == before[n]
+                   for n, s in sessions.items()), \
+            "result-cache hits dispatched device work"
+        st = gateway.stats()
+        # the burst was submitted faster than the window: the batcher must
+        # have stacked several queries into one flush
+        assert st["demo"]["max_window_queries"] >= 2, \
+            f"no dynamic batching: {st['demo']}"
+        # tenant isolation: private engines with partitioned budgets when a
+        # total cache budget is given, distinct engines regardless
+        assert sessions["demo"].engine is not sessions["tpch"].engine, \
+            "tenants share an engine despite per-tenant budgets"
+        # a different top_k must still hit (served from the full histogram)
+        r = gateway.query("demo", FCTRequest(
+            keywords=("alps", "bordeaux"), top_k=2, r_max=args.r_max,
+            mode=args.mode))
+        assert r.cache_hit and len(r.terms) == 2, "top_k slicing missed"
+        # explicit invalidation forces re-execution
+        assert gateway.invalidate("demo") > 0
+        r = gateway.query("demo", make_request(["alps", "bordeaux"]))
+        assert not r.cache_hit, "invalidated entry still served"
 
-    session.close()
-    st = session.stats()
-    print(f"# served {st['queries_served']} queries | executable cache: "
-          f"{st['entries']} entries, {st['hits']} hits / {st['misses']} "
-          f"misses, {st['traces']} traces, {st['evictions']} evictions | "
-          f"plan cache: {st['plan_entries']} entries, {st['plan_hits']} "
-          f"hits | tuple-set cache: {st['tuple_set_entries']} entries",
-          flush=True)
+    st = gateway.stats()
+    gateway.close()
+    registry.close()
+    for name in registry.names():
+        if name not in st:
+            continue
+        t = st[name]
+        print(f"# {name}: {t['queries_served']} served | results "
+              f"{t['result_hits']}h/{t['result_misses']}m | windows "
+              f"{t['windows_flushed']} (mean {t['mean_window_queries']} "
+              f"q/window, peak {t['max_window_queries']}) | executables "
+              f"{t['entries']} ({t['hits']}h {t['traces']}t "
+              f"{t['evictions']}e) | stacks {t['stack_hits']}h", flush=True)
+    print(f"# gateway: {st['gateway']['submitted']} submitted across "
+          f"{st['gateway']['tenants']} tenants", flush=True)
     if args.smoke:
         print("SMOKE OK")
 

@@ -1,0 +1,132 @@
+"""Time-windowed dynamic batching for one tenant's FCTSession.
+
+The ROADMAP dynamic-batching item: `submit()`'s pipeline keeps a burst of
+queries *in flight* concurrently but still dispatches each one individually
+— only explicit ``query_batch`` callers get cross-query stacked dispatches.
+Under heavy traffic the gateway should make that amortization automatic: a
+``DynamicBatcher`` collects requests arriving within a small time window
+(~1ms, configurable) and flushes each window through
+``FCTSession.query_batch``, so same-signature CNs from *different users*
+ride one stacked device dispatch.  The per-CN program family buckets its
+CN-axis size (null-plan padding in the runtime), so varying window sizes
+replay a handful of compiled programs instead of one per size.
+
+The trade is explicit: up to ``window_ms`` of added latency per query buys
+fewer device round-trips per query — the paper's batch-amortization argument
+(n-gram statistics serving) applied to the online workload.
+
+One flusher thread per batcher.  The window opens when a request lands in an
+empty queue and closes ``window_ms`` later; everything collected in between
+is one ``query_batch`` call.  ``window_ms=0`` degenerates to
+flush-as-fast-as-possible (whatever accumulated while the previous flush
+ran forms the next batch — still > 1 under load).  Errors during a flush
+land on every future of that window (request *validation* errors are caught
+earlier, at gateway submit time).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from typing import List, Tuple
+
+from repro.api.request import FCTRequest
+from repro.api.session import FCTSession
+
+
+class DynamicBatcher:
+    """Collect requests for ``window_ms``; flush through ``query_batch``."""
+
+    def __init__(self, session: FCTSession, window_ms: float = 1.0,
+                 name: str = "") -> None:
+        if window_ms < 0:
+            raise ValueError(f"window_ms must be >= 0, got {window_ms}")
+        self.session = session
+        self.window_ms = window_ms
+        self.name = name
+        self._pending: List[Tuple[FCTRequest, Future]] = []
+        self._cv = threading.Condition()
+        self._closed = False
+        # occupancy telemetry (read under _cv by stats())
+        self.windows_flushed = 0
+        self.queries_batched = 0
+        self.max_window_queries = 0
+        self._thread = threading.Thread(
+            target=self._loop, name=f"fct-batcher-{name or hex(id(self))}",
+            daemon=True)
+        self._thread.start()
+
+    def submit(self, request: FCTRequest) -> Future:
+        fut: Future = Future()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("batcher is closed")
+            self._pending.append((request, fut))
+            self._cv.notify()
+        return fut
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._pending and not self._closed:
+                    self._cv.wait()
+                if self._pending:
+                    # window opens at the first queued request; keep
+                    # collecting until it elapses (spurious wakeups from
+                    # later submits just re-check the deadline)
+                    deadline = time.perf_counter() + self.window_ms / 1e3
+                    while not self._closed:
+                        remaining = deadline - time.perf_counter()
+                        if remaining <= 0:
+                            break
+                        self._cv.wait(timeout=remaining)
+                batch, self._pending = self._pending, []
+                closed = self._closed
+            if batch:
+                self._flush(batch)
+            if closed:
+                return
+
+    def _flush(self, batch: List[Tuple[FCTRequest, Future]]) -> None:
+        reqs = [r for r, _ in batch]
+        try:
+            responses = self.session.query_batch(reqs)
+        except BaseException as exc:
+            # batch-wide failure (e.g. histogram overflow): every request in
+            # the window shared the dispatch, so every future gets the error
+            for _, fut in batch:
+                if not fut.cancelled():
+                    try:
+                        fut.set_exception(exc)
+                    except Exception:      # racing cancel()
+                        pass
+            return
+        with self._cv:
+            self.windows_flushed += 1
+            self.queries_batched += len(batch)
+            self.max_window_queries = max(self.max_window_queries, len(batch))
+        for (_, fut), resp in zip(batch, responses):
+            if not fut.cancelled():
+                try:
+                    fut.set_result(resp)
+                except Exception:          # racing cancel()
+                    pass
+
+    def stats(self) -> dict:
+        with self._cv:
+            windows = self.windows_flushed
+            queries = self.queries_batched
+            peak = self.max_window_queries
+        return {"windows_flushed": windows, "queries_batched": queries,
+                "max_window_queries": peak,
+                "mean_window_queries": round(queries / windows, 3)
+                if windows else 0.0}
+
+    def close(self) -> None:
+        """Flush whatever is pending, then stop the flusher (idempotent)."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            self._cv.notify()
+        self._thread.join()

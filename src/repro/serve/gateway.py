@@ -1,0 +1,271 @@
+"""Gateway: the multi-tenant serving front door.
+
+One object ties the serving subsystem together (see README.md for the
+architecture):
+
+    submit("tpch", req) ──► ResultCache (per tenant) ── hit ──► Future
+                                 │ miss                        (resolved)
+                                 ▼
+                            DynamicBatcher (per tenant, ~1ms window)
+                                 ▼  query_batch: stacked dispatches
+                            FCTSession ──► runtime engine
+
+``submit`` resolves the request's keywords through the tenant's session
+(string/id spellings and permutations collapse onto one cache key), answers
+from the tenant's :class:`ResultCache` when possible — a hit costs zero
+engine dispatches and re-slices ``top_k`` from the memoized full histogram —
+and otherwise enqueues on the tenant's :class:`DynamicBatcher` so
+same-window queries share device dispatches.  Completed responses are
+inserted back into the result cache.
+
+Backpressure: at most ``max_inflight`` uncached requests may be unresolved
+gateway-wide; ``submit`` blocks (admission control) once the bound is hit,
+so a client burst cannot queue unbounded device work.  Cache hits bypass
+the bound — they consume no engine capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from concurrent.futures import Future
+from typing import Dict, Optional, Tuple
+
+from repro.api.request import FCTRequest, FCTResponse
+from repro.api.session import FCTSession
+from repro.core.star import topk_terms
+from repro.serve.batcher import DynamicBatcher
+from repro.serve.registry import SchemaRegistry
+from repro.serve.result_cache import ResultCache
+
+
+@dataclasses.dataclass
+class GatewayConfig:
+    """Gateway-level knobs (per-tenant *cache* budgets live on the
+    registry; these govern batching, result caching and admission)."""
+
+    batch_window_ms: float = 1.0        # dynamic-batching window per tenant
+    result_cache_ttl_s: Optional[float] = 60.0  # None = no expiry, 0 = off
+    result_cache_entries: int = 256     # per-tenant result-cache LRU bound
+    max_inflight: int = 64              # gateway-wide uncached in-flight cap
+
+    def __post_init__(self) -> None:
+        # fail at construction, not inside the first submit()'s lazy lane
+        # build (where callers would misread it as a per-request rejection)
+        if self.max_inflight < 1:
+            raise ValueError(
+                f"max_inflight must be >= 1, got {self.max_inflight}")
+        if self.batch_window_ms < 0:
+            raise ValueError(
+                f"batch_window_ms must be >= 0, got {self.batch_window_ms}")
+        if self.result_cache_ttl_s is not None and self.result_cache_ttl_s < 0:
+            raise ValueError(
+                f"result_cache_ttl_s must be >= 0 or None, got "
+                f"{self.result_cache_ttl_s}")
+        if self.result_cache_entries < 1:
+            raise ValueError(
+                f"result_cache_entries must be >= 1, got "
+                f"{self.result_cache_entries}")
+
+
+@dataclasses.dataclass
+class _Lane:
+    """Per-tenant serving state, built lazily with the session."""
+
+    session: FCTSession
+    batcher: DynamicBatcher
+    results: ResultCache
+
+
+class Gateway:
+    """submit(schema, request) -> Future over a SchemaRegistry."""
+
+    def __init__(self, registry: SchemaRegistry,
+                 config: Optional[GatewayConfig] = None) -> None:
+        self.registry = registry
+        self.config = config if config is not None else GatewayConfig()
+        self._lanes: Dict[str, _Lane] = {}
+        self._lock = threading.Lock()
+        self._inflight = threading.Semaphore(self.config.max_inflight)
+        self._closed = False
+        self.submitted = 0
+        self.rejected = 0
+
+    # -- per-tenant lane management -----------------------------------------
+
+    def _lane(self, schema: str) -> _Lane:
+        with self._lock:
+            lane = self._lanes.get(schema)
+            if lane is not None:
+                return lane
+        session = self.registry.session(schema)   # KeyError on unknown name
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("gateway is closed")
+            lane = self._lanes.get(schema)
+            if lane is None:
+                lane = self._lanes[schema] = _Lane(
+                    session=session,
+                    batcher=DynamicBatcher(
+                        session, window_ms=self.config.batch_window_ms,
+                        name=schema),
+                    results=ResultCache(
+                        max_entries=self.config.result_cache_entries,
+                        ttl_s=self.config.result_cache_ttl_s))
+            return lane
+
+    @staticmethod
+    def _cache_key(resolved: Tuple[int, ...], req: FCTRequest):
+        # everything that changes the histogram; top_k sliced per request
+        return (tuple(sorted(resolved)), req.r_max, req.mode, req.rho,
+                req.sample_frac, req.salt)
+
+    def _serve_hit(self, lane: _Lane, cached: FCTResponse, req: FCTRequest,
+                   kws: Tuple[int, ...]) -> FCTResponse:
+        """Re-bind a memoized response to the incoming request: slice its
+        ``top_k`` from the cached full histogram (Def. 6 selection against
+        the tenant's stop list), mark it, zero the engine delta."""
+        freq = cached.all_freqs.copy()    # callers may mutate their response
+        ids, f = topk_terms(freq, kws, req.top_k, lane.session.stop_mask)
+        if lane.session.tokenizer is not None:
+            terms = [lane.session.tokenizer.decode(t) for t in ids]
+        else:
+            terms = [f"<{int(t)}>" for t in ids]
+        return dataclasses.replace(
+            cached, terms=terms, term_ids=ids, freqs=f, all_freqs=freq,
+            timings={"plan_ms": 0.0, "execute_ms": 0.0, "total_ms": 0.0},
+            engine_stats={k: 0 for k in cached.engine_stats},
+            cold=False, cache_hit=True, request=req)
+
+    # -- request path --------------------------------------------------------
+
+    def submit(self, schema: str, request: FCTRequest) -> "Future":
+        """Route one request; returns a Future of its FCTResponse.
+
+        Raises synchronously on an unknown schema (KeyError) or a keyword
+        the tenant cannot resolve (ValueError) — admission errors should
+        not consume a batching slot.  May block for backpressure.
+        """
+        if self._closed:
+            raise RuntimeError("gateway is closed")
+        try:
+            lane = self._lane(schema)
+            resolved = lane.session.resolve_keywords(request.keywords)
+        except BaseException:
+            self._count("rejected")
+            raise
+        key = self._cache_key(resolved, request)
+        cached = lane.results.get(key)
+        if cached is not None:
+            fut: Future = Future()
+            fut.set_result(self._serve_hit(lane, cached, request, resolved))
+            self._count("submitted")
+            return fut
+        self._inflight.acquire()          # backpressure: bounded device work
+        try:
+            inner = lane.batcher.submit(request)
+        except BaseException:
+            self._inflight.release()
+            self._count("rejected")
+            raise
+        # the caller gets a gateway-owned future resolved AFTER the result
+        # is copied into the cache: Future.set_result wakes waiters before
+        # running callbacks, so handing out the batcher's future directly
+        # would let the miss caller mutate the response while (or before)
+        # the trailing callback snapshots it for later hits
+        outer: Future = Future()
+        gen = lane.results.generation     # fences a racing invalidate()
+        inner.add_done_callback(
+            lambda f, lane=lane, key=key, outer=outer, gen=gen:
+                self._relay(lane, key, gen, f, outer))
+        self._count("submitted")
+        return outer
+
+    def _count(self, counter: str) -> None:
+        with self._lock:                  # concurrent submitters race else
+            setattr(self, counter, getattr(self, counter) + 1)
+
+    @staticmethod
+    def _resolve(fut: "Future", result=None, exc=None) -> None:
+        if fut.cancelled():               # caller-side cancel; tolerated
+            return
+        try:
+            if exc is not None:
+                fut.set_exception(exc)
+            else:
+                fut.set_result(result)
+        except Exception:                 # racing cancel()
+            pass
+
+    def _relay(self, lane: _Lane, key, gen: int, inner: "Future",
+               outer: "Future") -> None:
+        self._inflight.release()
+        if inner.cancelled():
+            outer.cancel()
+            return
+        exc = inner.exception()
+        if exc is not None:
+            self._resolve(outer, exc=exc)
+            return
+        resp = inner.result()
+        # cache a private master FIRST: the caller owns `resp` once the
+        # outer future resolves and may mutate its histogram/stats, which
+        # must not poison later hits.  `generation` drops the insert when
+        # an invalidate() overtook this query in flight.
+        lane.results.put(key, dataclasses.replace(
+            resp, all_freqs=resp.all_freqs.copy(),
+            engine_stats=dict(resp.engine_stats)), generation=gen)
+        self._resolve(outer, result=resp)
+
+    def query(self, schema: str, request: FCTRequest,
+              timeout: Optional[float] = None) -> FCTResponse:
+        """Synchronous convenience wrapper over ``submit``."""
+        return self.submit(schema, request).result(timeout=timeout)
+
+    # -- cache control -------------------------------------------------------
+
+    def invalidate(self, schema: str) -> int:
+        """Drop every memoized result for one tenant (call after mutating
+        its relations); returns the number of entries dropped."""
+        with self._lock:
+            lane = self._lanes.get(schema)
+        if lane is None:
+            if schema not in self.registry:
+                raise KeyError(f"unknown schema {schema!r}")
+            return 0                       # never served: nothing cached
+        return lane.results.invalidate()
+
+    # -- lifecycle / introspection ------------------------------------------
+
+    def stats(self) -> Dict[str, dict]:
+        """Per-tenant result-cache + batch-occupancy + session counters,
+        plus gateway-wide admission counters under ``"gateway"``."""
+        with self._lock:
+            lanes = dict(self._lanes)
+        out: Dict[str, dict] = {"gateway": {
+            "submitted": self.submitted, "rejected": self.rejected,
+            "max_inflight": self.config.max_inflight,
+            "tenants": len(lanes)}}
+        for name, lane in lanes.items():
+            stats = dict(lane.results.stats())
+            stats.update(lane.batcher.stats())
+            stats.update(lane.session.stats())
+            out[name] = stats
+        return out
+
+    def close(self) -> None:
+        """Flush every tenant's pending window and stop serving.  Sessions
+        belong to the registry (which may back other gateways) — close it
+        separately when the process is done with the datasets."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            lanes = dict(self._lanes)
+        for lane in lanes.values():
+            lane.batcher.close()
+
+    def __enter__(self) -> "Gateway":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -178,6 +178,77 @@ def test_executable_cache_lru_eviction():
         ExecutableCache(max_entries=0)
 
 
+def test_stacked_array_cache_reused_on_warm_dispatch():
+    # ROADMAP stacked-array caching: the padded/stacked host arrays are
+    # memoized on the cached routing plan (keyed by signature), so a warm
+    # repeat skips the stack_group memcpy — the engine counter proves reuse
+    schema, kws = _crafted_schema(seed=0)
+    engine = FCTEngine()
+    session = FCTSession(schema, engine=engine)
+    req = FCTRequest(keywords=tuple(kws), r_max=3)
+    r1 = session.query(req)
+    assert engine.stack_misses > 0 and engine.stack_hits == 0
+    misses = engine.stack_misses
+    r2 = session.query(req)
+    assert engine.stack_hits > 0, "warm dispatch re-stacked host arrays"
+    assert engine.stack_misses == misses
+    np.testing.assert_array_equal(r1.all_freqs, r2.all_freqs)
+    assert r2.engine_stats["stack_hits"] > 0   # delta lands on the response
+    # the pipelined path shares the same planned-query stacks
+    hits = engine.stack_hits
+    session.submit(req).result(timeout=300)
+    assert engine.stack_hits > hits
+    session.close()
+    # multi-query (per-CN-output) dispatches mix plans of several requests:
+    # their group composition is batch-dependent, so they must NOT consume
+    # or populate the signature-keyed stacks
+    hits, misses = engine.stack_hits, engine.stack_misses
+    session.query_batch([req, FCTRequest(keywords=tuple(kws), r_max=3,
+                                         salt=1)])
+    assert (engine.stack_hits, engine.stack_misses) == (hits, misses)
+
+
+def test_stacked_array_cache_ignored_by_unbatched_engine():
+    # an unbatched engine emits one singleton group per plan, so a single
+    # dispatch can contain the SAME signature twice — a signature-keyed
+    # stack would serve the first plan's arrays for the second (silently
+    # wrong counts); the engine must bypass the cache there
+    schema, kws = _crafted_schema(seed=0)
+    engine = FCTEngine(batch=False)
+    session = FCTSession(schema, engine=engine)
+    req = FCTRequest(keywords=tuple(kws), r_max=3)
+    res = session.query(req)
+    assert engine.stack_hits == 0, \
+        "unbatched engine reused a stack across distinct plans"
+    np.testing.assert_array_equal(res.all_freqs, fct_star(schema, kws, 3))
+    np.testing.assert_array_equal(session.query(req).all_freqs,
+                                  res.all_freqs)
+
+
+def test_lru_eviction_under_concurrent_submit_pipeline():
+    # hammer an undersized executable cache from the submit() pipeline with
+    # three interleaved CN families: executables are continuously evicted
+    # and rebuilt while queries are in flight — every response must still
+    # be correct (no stale executable served for the wrong signature)
+    schema, kws = _crafted_schema(seed=0)
+    session = FCTSession(schema, config=SessionConfig(
+        cache_max_entries=1, plan_cache_size=0))
+    reqs = [FCTRequest(keywords=tuple(kws), r_max=3),
+            FCTRequest(keywords=tuple(kws), r_max=2),
+            FCTRequest(keywords=(kws[0],), r_max=3)]
+    want = {i: session.query(r).all_freqs for i, r in enumerate(reqs)}
+    evictions_before = session.engine.cache.evictions
+    futs = [(i, session.submit(reqs[i]))
+            for _ in range(4) for i in range(len(reqs))]
+    for i, fut in futs:
+        np.testing.assert_array_equal(fut.result(timeout=600).all_freqs,
+                                      want[i])
+    assert session.engine.cache.evictions > evictions_before, \
+        "interleaved shape families never overflowed the 1-entry cache"
+    assert session.engine.cache.stats()["entries"] <= 1
+    session.close()
+
+
 def test_session_plumbs_cache_cap_through_config():
     schema, kws = _crafted_schema(seed=0)
     session = FCTSession(schema, config=SessionConfig(cache_max_entries=1))

@@ -1,0 +1,319 @@
+"""Serving gateway: schema registry, dynamic batching, TTL result cache,
+backpressure and multi-tenant isolation."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import FCTRequest, FCTSession, SessionConfig
+from repro.data.tpch import TpchConfig
+from repro.serve import (DynamicBatcher, Gateway, GatewayConfig,
+                         SchemaRegistry, ResultCache)
+
+from test_engine import _crafted_schema
+
+
+# -- SchemaRegistry ----------------------------------------------------------
+
+def test_registry_lazy_build_and_partitioned_budgets():
+    schema_a, _ = _crafted_schema(seed=0)
+    reg = SchemaRegistry(total_cache_entries=64, total_plan_entries=64,
+                         total_tuple_set_entries=32)
+    reg.register("a", schema_a)
+    reg.register("b", TpchConfig(scale=0.05))   # generated lazily
+    assert set(reg.names()) == {"a", "b"} and len(reg) == 2
+    assert not reg.built("a") and not reg.built("b")
+    sa = reg.session("a")
+    assert reg.built("a") and not reg.built("b")
+    sb = reg.session("b")
+    assert sb.schema.fact.rows > 0              # TpchConfig materialized
+    # budgets partitioned over 2 tenants; private engine per tenant
+    for s in (sa, sb):
+        assert s.engine.cache.max_entries == 32
+        assert s.config.plan_cache_size == 32
+        assert s.config.tuple_set_cache_size == 16
+    assert sa.engine is not sb.engine
+    assert reg.session("a") is sa               # memoized
+
+
+def test_registry_rejects_bad_names_and_duplicates():
+    schema, _ = _crafted_schema(seed=0)
+    reg = SchemaRegistry()
+    reg.register("ok", schema)
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("ok", schema)
+    for bad in ("", "with:colon", " padded "):
+        with pytest.raises(ValueError, match="name"):
+            reg.register(bad, schema)
+    with pytest.raises(ValueError, match="reserved"):
+        reg.register("gateway", schema)  # would shadow Gateway.stats()
+    with pytest.raises(KeyError, match="unknown schema"):
+        reg.session("missing")
+    with pytest.raises(TypeError, match="StarSchema or TpchConfig"):
+        reg.register("nope", object())
+        reg.session("nope")
+
+
+def test_registry_shared_engine_when_no_budget():
+    schema_a, _ = _crafted_schema(seed=0)
+    schema_b, _ = _crafted_schema(seed=1)
+    reg = SchemaRegistry()                       # no executable budget
+    reg.register("a", schema_a)
+    reg.register("b", schema_b)
+    assert reg.session("a").engine is reg.session("b").engine
+
+
+def test_registry_explicit_config_overrides_partition():
+    schema, _ = _crafted_schema(seed=0)
+    reg = SchemaRegistry(total_cache_entries=64)
+    reg.register("a", schema, config=SessionConfig(cache_max_entries=5))
+    assert reg.session("a").engine.cache.max_entries == 5
+
+
+# -- ResultCache -------------------------------------------------------------
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_result_cache_ttl_expiry():
+    clock = _FakeClock()
+    cache = ResultCache(max_entries=8, ttl_s=10.0, clock=clock)
+    cache.put("k", "v")
+    assert cache.get("k") == "v" and cache.hits == 1
+    clock.t = 9.9
+    assert cache.get("k") == "v"
+    clock.t = 10.0                              # expired exactly at TTL
+    assert cache.get("k") is None
+    assert cache.expirations == 1 and len(cache) == 0
+    cache.put("k", "v2")                        # re-insert gets a fresh TTL
+    clock.t = 19.9
+    assert cache.get("k") == "v2"
+    clock.t = 50.0
+    assert cache.get("k") is None and cache.expirations == 2
+
+
+def test_result_cache_refreshes_ttl_on_reput():
+    clock = _FakeClock()
+    cache = ResultCache(ttl_s=10.0, clock=clock)
+    cache.put("k", "old")
+    clock.t = 5.0
+    cache.put("k", "new")                       # must NOT keep the old expiry
+    clock.t = 12.0                              # old expiry passed, new alive
+    assert cache.get("k") == "new"
+
+
+def test_result_cache_invalidation_and_disable():
+    cache = ResultCache(ttl_s=None)             # no expiry
+    cache.put("a", 1)
+    cache.put("b", 2)
+    assert cache.invalidate("a") == 1 and cache.get("a") is None
+    assert cache.invalidate() == 1 and len(cache) == 0  # drop-all
+    assert cache.invalidations == 2
+    off = ResultCache(ttl_s=0)                  # disabled
+    off.put("a", 1)
+    assert off.get("a") is None and len(off) == 0
+    with pytest.raises(ValueError, match="ttl_s"):
+        ResultCache(ttl_s=-1)
+
+
+def test_result_cache_generation_fences_inflight_puts():
+    # a query dispatched BEFORE invalidate() must not re-insert its
+    # pre-invalidation result when it completes after
+    cache = ResultCache(ttl_s=None)
+    gen = cache.generation
+    cache.invalidate()                          # data mutated meanwhile
+    cache.put("k", "stale", generation=gen)     # in-flight result lands late
+    assert cache.get("k") is None, "pre-invalidation result re-entered"
+    cache.put("k", "fresh", generation=cache.generation)
+    assert cache.get("k") == "fresh"
+    cache.put("k2", "unfenced")                 # no generation: always lands
+    assert cache.get("k2") == "unfenced"
+
+
+def test_result_cache_lru_bound():
+    cache = ResultCache(max_entries=2, ttl_s=None)
+    cache.put("a", 1)
+    cache.put("b", 2)
+    cache.get("a")                              # refresh recency
+    cache.put("c", 3)                           # evicts b
+    assert cache.get("b") is None and cache.get("a") == 1
+    assert cache.stats()["result_evictions"] == 1
+
+
+# -- DynamicBatcher ----------------------------------------------------------
+
+def test_batcher_windows_stack_queries_and_match_sync():
+    schema, kws = _crafted_schema(seed=0)
+    session = FCTSession(schema)
+    batcher = DynamicBatcher(session, window_ms=20.0, name="t")
+    reqs = [FCTRequest(keywords=tuple(kws), r_max=3, salt=i)
+            for i in range(4)]
+    futs = [batcher.submit(r) for r in reqs]    # all inside one window
+    got = [f.result(timeout=300) for f in futs]
+    st = batcher.stats()
+    assert st["windows_flushed"] == 1 and st["queries_batched"] == 4
+    assert st["max_window_queries"] == 4 and st["mean_window_queries"] == 4.0
+    for resp, req in zip(got, reqs):
+        np.testing.assert_array_equal(resp.all_freqs,
+                                      session.query(req).all_freqs)
+    batcher.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        batcher.submit(reqs[0])
+
+
+def test_batcher_zero_window_and_close_flushes_pending():
+    schema, kws = _crafted_schema(seed=0)
+    session = FCTSession(schema)
+    batcher = DynamicBatcher(session, window_ms=0.0)
+    fut = batcher.submit(FCTRequest(keywords=tuple(kws), r_max=3))
+    assert fut.result(timeout=300).n_cns > 0
+    # pending requests at close() time are flushed, not dropped
+    batcher2 = DynamicBatcher(session, window_ms=200.0)
+    fut2 = batcher2.submit(FCTRequest(keywords=tuple(kws), r_max=2))
+    batcher2.close()                            # before the window elapses
+    assert fut2.done() and fut2.result().n_cns >= 0
+    with pytest.raises(ValueError, match="window_ms"):
+        DynamicBatcher(session, window_ms=-1)
+
+
+# -- Gateway -----------------------------------------------------------------
+
+def _two_tenant_gateway(window_ms=20.0, ttl_s=60.0, max_inflight=64):
+    schema_a, kws = _crafted_schema(seed=0)
+    schema_b, _ = _crafted_schema(seed=1)
+    reg = SchemaRegistry(total_cache_entries=64)
+    reg.register("a", schema_a)
+    reg.register("b", schema_b)
+    gw = Gateway(reg, GatewayConfig(batch_window_ms=window_ms,
+                                    result_cache_ttl_s=ttl_s,
+                                    max_inflight=max_inflight))
+    return gw, reg, kws
+
+
+def test_gateway_result_cache_hits_skip_engine():
+    gw, reg, kws = _two_tenant_gateway()
+    req = FCTRequest(keywords=tuple(kws), r_max=3)
+    miss = gw.query("a", req)
+    assert not miss.cache_hit
+    engine = reg.session("a").engine
+    before = (engine.batches_run, engine.cache.traces)
+    hit = gw.query("a", req)
+    assert hit.cache_hit and not hit.cold
+    assert (engine.batches_run, engine.cache.traces) == before, \
+        "cache hit touched the engine"
+    np.testing.assert_array_equal(hit.all_freqs, miss.all_freqs)
+    assert hit.engine_stats == {k: 0 for k in miss.engine_stats}
+    # mutating a response's histogram must not corrupt the cache — neither
+    # a hit's copy nor the original MISS response (the cached master is a
+    # private copy, not the object handed to the first caller)
+    want = miss.all_freqs.copy()
+    hit.all_freqs[:] = -1
+    miss.all_freqs[:] = -1
+    again = gw.query("a", req)
+    assert again.cache_hit
+    np.testing.assert_array_equal(again.all_freqs, want)
+    gw.close()
+
+
+def test_gateway_topk_sliced_from_cached_histogram():
+    gw, reg, kws = _two_tenant_gateway()
+    full = gw.query("a", FCTRequest(keywords=tuple(kws), r_max=3, top_k=10))
+    small = gw.query("a", FCTRequest(keywords=tuple(kws), r_max=3, top_k=3))
+    assert small.cache_hit and len(small.term_ids) == 3
+    np.testing.assert_array_equal(small.term_ids, full.term_ids[:3])
+    np.testing.assert_array_equal(small.freqs, full.freqs[:3])
+    # keyword permutations and id spellings share one entry
+    perm = gw.query("a", FCTRequest(keywords=tuple(reversed(kws)), r_max=3))
+    assert perm.cache_hit
+    np.testing.assert_array_equal(perm.all_freqs, full.all_freqs)
+    gw.close()
+
+
+def test_gateway_tenant_isolation_and_invalidation():
+    gw, reg, kws = _two_tenant_gateway()
+    ra = gw.query("a", FCTRequest(keywords=tuple(kws), r_max=3))
+    rb = gw.query("b", FCTRequest(keywords=tuple(kws), r_max=3))
+    assert not ra.cache_hit and not rb.cache_hit  # caches are per tenant
+    sa, sb = reg.session("a"), reg.session("b")
+    assert sa.engine is not sb.engine
+    assert sa.engine.cache.max_entries == sb.engine.cache.max_entries == 32
+    # invalidating a does not touch b
+    assert gw.invalidate("a") == 1
+    assert not gw.query("a", FCTRequest(keywords=tuple(kws),
+                                        r_max=3)).cache_hit
+    assert gw.query("b", FCTRequest(keywords=tuple(kws), r_max=3)).cache_hit
+    with pytest.raises(KeyError, match="unknown"):
+        gw.invalidate("zzz")
+    st = gw.stats()
+    assert st["gateway"]["tenants"] == 2
+    assert st["a"]["result_invalidations"] == 1
+    assert st["b"]["result_hits"] == 1
+    gw.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        gw.submit("a", FCTRequest(keywords=tuple(kws), r_max=3))
+
+
+def test_gateway_rejects_bad_requests_synchronously():
+    gw, reg, kws = _two_tenant_gateway()
+    with pytest.raises(KeyError, match="unknown schema"):
+        gw.submit("nope", FCTRequest(keywords=tuple(kws), r_max=3))
+    with pytest.raises(ValueError, match="tokenizer"):
+        gw.submit("a", FCTRequest(keywords=("string-kw",), r_max=3))
+    st = gw.stats()["gateway"]
+    assert st["submitted"] == 0 and st["rejected"] == 2
+    gw.close()
+    # bad gateway knobs fail at construction, not inside the first submit
+    for bad in (dict(batch_window_ms=-2), dict(result_cache_ttl_s=-1),
+                dict(result_cache_entries=0), dict(max_inflight=0)):
+        with pytest.raises(ValueError):
+            GatewayConfig(**bad)
+
+
+def test_gateway_backpressure_bounds_inflight():
+    gw, reg, kws = _two_tenant_gateway(window_ms=400.0, ttl_s=0,
+                                       max_inflight=2)
+    reqs = [FCTRequest(keywords=tuple(kws), r_max=3, salt=i)
+            for i in range(4)]
+    order = []
+    done = threading.Event()
+
+    def feeder():
+        futs = [gw.submit("a", r) for r in reqs]   # blocks past 2 in flight
+        order.append("submitted")
+        [f.result(timeout=300) for f in futs]
+        done.set()
+
+    t = threading.Thread(target=feeder, daemon=True)
+    t.start()
+    time.sleep(0.05)  # well inside the 400ms window: nothing has flushed
+    # the feeder must be wedged on backpressure, not finished submitting
+    assert "submitted" not in order, "max_inflight=2 admitted 4 requests"
+    assert done.wait(timeout=300), "backpressure deadlocked"
+    t.join()
+    gw.close()
+
+
+def test_gateway_mixed_tenants_concurrent_batches():
+    gw, reg, kws = _two_tenant_gateway(window_ms=30.0, ttl_s=0)
+    futs = []
+    for i in range(3):                      # interleaved tenants, one burst
+        futs.append(("a", gw.submit("a", FCTRequest(keywords=tuple(kws),
+                                                    r_max=3, salt=i))))
+        futs.append(("b", gw.submit("b", FCTRequest(keywords=tuple(kws),
+                                                    r_max=3, salt=i))))
+    responses = [(t, f.result(timeout=300)) for t, f in futs]
+    st = gw.stats()
+    for tenant in ("a", "b"):
+        assert st[tenant]["max_window_queries"] >= 2, \
+            f"tenant {tenant} never batched: {st[tenant]}"
+    # each tenant's results come from its own schema (different seeds)
+    fa = [r.all_freqs for t, r in responses if t == "a"]
+    fb = [r.all_freqs for t, r in responses if t == "b"]
+    assert not np.array_equal(fa[0], fb[0]), "tenants answered identically"
+    gw.close()
