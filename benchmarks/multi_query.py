@@ -1,4 +1,5 @@
-"""Multi-query serving benchmark: sequential vs batched vs pipelined.
+"""Multi-query serving benchmark: sequential vs batched vs pipelined, plus
+host->device traffic per warm query (device-resident relation store).
 
 The serving regime (ROADMAP north star): one loaded dataset, a stream of
 mixed-shape FCT queries (with repeats, as real refinement traffic has).  All
@@ -84,3 +85,54 @@ def run():
         emit(f"fct_multi_query_{name}/star/{n}q", mean[name],
              f"trimmed mean of {ROUNDS} interleaved rounds, "
              f"{dispatches[name]} dispatches/round", **extra)
+
+    _bytes_shipped_per_warm_query(schema, kws)
+
+
+def _bytes_shipped_per_warm_query(schema, kws):
+    """Host->device traffic of ONE warm query, before/after the relation
+    store: the legacy path re-ships every CN's stacked text/keys columns on
+    every dispatch; the store path ships only send tables + key-column
+    indices (the columns are device-resident).  Self-checking: the warm
+    store path must perform ZERO relation-column transfers."""
+    from repro.launch.mesh import make_worker_mesh
+    from repro.runtime.store import RelationStore
+
+    session = FCTSession(schema, engine=FCTEngine())
+    req = FCTRequest(tuple(kws), r_max=4)
+    plans = session._plan(req).plans
+    mesh = make_worker_mesh()
+    n_dispatch = 3
+
+    legacy = FCTEngine()
+    legacy.run_plans(plans, mesh)                      # warm the executables
+    b0 = legacy.bytes_shipped
+    for _ in range(n_dispatch):
+        legacy.run_plans(plans, mesh)
+    legacy_bytes = (legacy.bytes_shipped - b0) / n_dispatch
+
+    store_eng = FCTEngine()
+    store = RelationStore(mesh)
+    store_eng.run_plans(plans, mesh, store=store)      # warm + upload
+    b0, u0, c0 = (store_eng.bytes_shipped, store.uploads,
+                  store_eng.column_bytes_shipped)
+    for _ in range(n_dispatch):
+        store_eng.run_plans(plans, mesh, store=store)
+    store_bytes = (store_eng.bytes_shipped - b0) / n_dispatch
+    assert store.uploads == u0, \
+        f"warm store path re-uploaded columns ({store.uploads - u0} uploads)"
+    assert store_eng.column_bytes_shipped == c0, \
+        "warm store path shipped relation columns"
+    session.close()
+
+    for name, nbytes in (("legacy", legacy_bytes), ("store", store_bytes)):
+        # us_per_call stays 0.0: this record measures BYTES, carried in
+        # bytes_per_query — latency tooling must not aggregate them as time
+        emit(f"fct_warm_query_host_bytes_{name}/star/{len(plans)}cns",
+             0.0,
+             f"host->device {int(nbytes)} bytes per warm query "
+             f"({name} path)",
+             kind="warm_query_bytes", path=name, n_joined_cns=len(plans),
+             bytes_per_query=int(nbytes),
+             reduction=round(legacy_bytes / max(store_bytes, 1.0), 1),
+             store_resident_bytes=store.resident_bytes)

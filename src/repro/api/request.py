@@ -60,7 +60,10 @@ class FCTResponse:
     batch — the dispatch is shared); ``cold`` is True iff that delta includes
     at least one retrace.  ``cache_hit`` marks responses the serving
     gateway's :class:`repro.serve.ResultCache` answered without touching the
-    engine (top-k re-sliced from the memoized full histogram).
+    engine (top-k re-sliced from the memoized full histogram);
+    ``coalesced`` marks responses that attached to an identical in-flight
+    query instead of dispatching their own (same zero-engine-cost re-slice,
+    but the histogram came from the leader request, not the cache).
     """
 
     terms: List[str]
@@ -77,6 +80,7 @@ class FCTResponse:
     cold: bool
     request: Optional[FCTRequest] = None
     cache_hit: bool = False
+    coalesced: bool = False
 
     def topk(self) -> List[Tuple[str, int]]:
         """(term, freq) pairs with zero-frequency tail dropped."""

@@ -8,7 +8,12 @@ executable cache) and memoizes everything that repeats across queries:
   * tuple sets per keyword set (one host data pass each — previously redone
     on every ``run_fct_query`` call),
   * CN enumerations per (n_keywords, r_max),
-  * compiled executables, via the engine's shape-bucketed LRU cache.
+  * compiled executables, via the engine's shape-bucketed LRU cache,
+  * device-resident tuple-set columns, via the session's RelationStore: the
+    big ``text``/``keys`` arrays are uploaded to the mesh once per tuple
+    set, so warm dispatches ship only kilobyte-sized routing tables
+    (``store_uploads``/``store_hits`` counters; ``invalidate()`` drops the
+    store and the derived host caches after a data mutation).
 
 Three execution paths:
 
@@ -39,9 +44,12 @@ from repro.core.plan import CNPlan, build_cn_plan
 from repro.core.star import topk_terms
 from repro.data.schema import PAD_ID, StarSchema, tokens_histogram
 from repro.runtime.cache import LruDict
+from repro.runtime.store import RelationStore
 
 _ENGINE_COUNTERS = ("hits", "misses", "traces", "evictions",
-                    "batches_run", "cns_run", "stack_hits", "stack_misses")
+                    "batches_run", "cns_run", "bytes_shipped",
+                    "column_bytes_shipped", "store_uploads", "store_hits",
+                    "store_upload_bytes")
 
 
 @dataclasses.dataclass
@@ -55,6 +63,9 @@ class SessionConfig:
     tuple_set_cache_size: int = 16      # LRU cap on cached tuple sets per
                                         # keyword set
     pipeline_queue_depth: int = 64      # bound on in-flight submit() requests
+    store_max_bytes: Optional[int] = None  # byte budget for the session's
+                                        # device-resident relation store
+                                        # (None = unbounded)
 
 
 @dataclasses.dataclass
@@ -70,11 +81,6 @@ class _PlannedQuery:
     shuffle_bytes: int
     imbalance: float
     plan_ms: float
-    # signature -> padded/stacked host arrays, filled by the engine on the
-    # first summed-family dispatch; plan-cache hits share this dict (via
-    # dataclasses.replace) so warm dispatches skip the stack_group memcpy
-    # (~2x plan-cache memory, see ROADMAP stacked-array caching)
-    stacks: Dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -129,10 +135,18 @@ class FCTSession:
                 "config.cache_max_entries, not both — the cap only applies "
                 "to a session-owned engine's cache")
         self.engine = engine
+        # device-resident tuple-set columns: uploaded once per (session,
+        # tuple set), referenced by every dispatch; dropped by invalidate()
+        self.store = RelationStore(self.mesh,
+                                   max_bytes=self.config.store_max_bytes)
         if stop_mask is None and tokenizer is not None:
             stop_mask = tokenizer.stop_mask()
         self.stop_mask = stop_mask
         self._tuple_sets: LruDict = LruDict(self.config.tuple_set_cache_size)
+        # bumped by invalidate() under _plan_lock: tuple sets / plans built
+        # from pre-mutation data must not re-enter the caches afterwards
+        # (same fence as RelationStore.epoch / ResultCache.generation)
+        self._data_epoch = 0
         self._cn_lists: Dict[Tuple[int, int], List[StarCN]] = {}
         self._plan_cache: LruDict = LruDict(
             self.config.plan_cache_size if self.config.plan_cache_size > 0
@@ -169,9 +183,12 @@ class FCTSession:
             if ts is not None:
                 self.ts_hits += 1
                 return ts
+            epoch = self._data_epoch
         ts = TupleSets.build(self.schema, keywords)  # outside the lock
         with self._plan_lock:
             self.ts_misses += 1
+            if self._data_epoch != epoch:  # invalidated mid-build: serve,
+                return ts                  # but cache nothing stale
             return self._tuple_sets.put(keywords, ts)
 
     def _get_cns(self, n_keywords: int, r_max: int) -> List[StarCN]:
@@ -206,13 +223,15 @@ class FCTSession:
                 self.plan_hits += 1
             else:
                 self.plan_misses += 1
+                epoch = self._data_epoch
         if cached is not None:
             return dataclasses.replace(
                 cached, request=req,
                 plan_ms=(time.perf_counter() - t0) * 1e3)
         planned = self._plan_resolved(req, kws, t0)
         with self._plan_lock:
-            self._plan_cache.put(key, planned)
+            if self._data_epoch == epoch:  # else invalidated mid-planning
+                self._plan_cache.put(key, planned)
         return planned
 
     def _plan_resolved(self, req: FCTRequest, kws: Tuple[int, ...],
@@ -254,7 +273,8 @@ class FCTSession:
                              imbalance=imbalance, plan_ms=plan_ms)
 
     def _engine_snapshot(self) -> Dict[str, int]:
-        st = self.engine.stats()
+        st = dict(self.engine.stats())
+        st.update(self.store.stats())
         return {k: st.get(k, 0) for k in _ENGINE_COUNTERS}
 
     def _engine_delta(self, before: Dict[str, int]) -> Dict[str, int]:
@@ -307,15 +327,14 @@ class FCTSession:
             before = self._engine_snapshot()
             pending = None
             if all_plans:
-                # single-query (summed) dispatches have a deterministic
-                # signature -> group mapping, so the planned query's stack
-                # dict can memoize the padded host arrays across warm calls;
-                # multi-query groups mix CNs of several requests and must
-                # re-stack per batch composition
+                # relation columns come from the session's device-resident
+                # store: the first dispatch over a tuple set uploads its
+                # columns, every later one — warm repeats, pipelined
+                # submits, multi-query batches of ANY composition — ships
+                # only send tables and key-column indices
                 pending = self.engine.dispatch_plans(
                     all_plans, self.mesh, self.config.histogram_backend,
-                    individual=individual,
-                    stack_cache=None if individual else planned[0].stacks)
+                    individual=individual, store=self.store)
             delta = self._engine_delta(before)
         dispatch_ms = (time.perf_counter() - t0) * 1e3
         return _InFlight(planned=planned, owners=np.asarray(owners, np.int64),
@@ -402,6 +421,27 @@ class FCTSession:
 
     # -- lifecycle / introspection ------------------------------------------
 
+    def invalidate(self) -> Dict[str, int]:
+        """Drop every cache derived from the relation DATA: tuple sets,
+        routing plans and the device-resident relation store.  The hook a
+        data-mutation path must call (the serving gateway's ``invalidate``
+        does, alongside its result cache) — the engine cannot know the
+        underlying relations changed.  Compiled executables survive: they
+        depend only on shapes.  Returns the drop counts."""
+        with self._plan_lock:
+            dropped = {"tuple_sets": len(self._tuple_sets),
+                       "plans": len(self._plan_cache)}
+            self._tuple_sets.clear()
+            self._plan_cache.clear()
+            self._data_epoch += 1   # fence in-flight builds (see _plan /
+            #                         _get_tuple_sets): their puts are dropped
+            # drop the device store INSIDE the same lock: a replan against
+            # the mutated data (RelationRef uids fingerprint row indices,
+            # which a mutation need not change) must never find
+            # pre-mutation device columns still resident
+            dropped["store_entries"] = self.store.clear()
+        return dropped
+
     def close(self) -> None:
         """Drain and stop the pipeline (if started).  The session remains
         usable for sync queries; a later submit() restarts the pipeline."""
@@ -417,8 +457,10 @@ class FCTSession:
         self.close()
 
     def stats(self) -> Dict[str, int]:
-        """Engine counters plus session-level cache/serving counters."""
+        """Engine + store counters plus session-level cache/serving
+        counters."""
         out = dict(self.engine.stats())
+        out.update(self.store.stats())
         out.update(queries_served=self.queries_served,
                    tuple_set_entries=len(self._tuple_sets),
                    tuple_set_hits=self.ts_hits,

@@ -65,25 +65,34 @@ def _route(text, keys, send):
             rmask.reshape(flat))
 
 
-def _device_fct_local(fact, dims, *, domains: Tuple[int, ...], vocab: int,
-                      histogram_backend: str):
-    """One worker's MR¹+MR² for one CN, WITHOUT the final cross-worker psum
-    (the runtime engine vmaps this over a batch of CNs and psums once)."""
-    acc = _acc_dtype()
-    ftext, fkeys, fmask = _route(fact["text"], fact["keys"], fact["send"])
-    routed_dims = [
-        _route(d["text"], d["keys"], d["send"]) for d in dims
-    ]
-    m = len(dims)
+def _route_cn(fact, dims):
+    """MR¹ shuffle stage shared by the fused, two-job and store paths: route
+    every relation of one CN per its static send table.
 
-    # --- MR1: num-arrays (combine + reduce-side counting) ---
+    ``fact["keys"]`` is either the CN's selected key columns ``[S, m]`` (host
+    paths) or the FULL-width store-resident matrix ``[S, m_all]`` with
+    ``fact["cols"]`` naming the CN's columns — the store uploads each fact
+    tuple set once and every CN over it selects its columns on device.
+    """
+    fkeys = fact["keys"]
+    if "cols" in fact:
+        fkeys = jnp.take(fkeys, fact["cols"], axis=1)
+    routed_fact = _route(fact["text"], fkeys, fact["send"])
+    routed_dims = [_route(d["text"], d["keys"], d["send"]) for d in dims]
+    return routed_fact, routed_dims
+
+
+def _mr1_volumes(routed_fact, routed_dims, domains: Tuple[int, ...]):
+    """MR¹ statistics on routed relations: num-arrays (combine + reduce-side
+    counting), then fact volume and per-dimension vol contributions
+    (Algorithm 3 stage 2).  Returns (vol_fact, dim_vols)."""
+    acc = _acc_dtype()
+    ftext, fkeys, fmask = routed_fact
+    m = len(routed_dims)
     nums = []
     for (dtext, dkeys, dmask), dom in zip(routed_dims, domains):
-        num = jnp.zeros((dom,), jnp.int32).at[dkeys].add(
-            dmask.astype(jnp.int32), mode="drop")
-        nums.append(num)
-
-    # --- MR1: volumes (Algorithm 3 stage 2) ---
+        nums.append(jnp.zeros((dom,), jnp.int32).at[dkeys].add(
+            dmask.astype(jnp.int32), mode="drop"))
     probes = [nums[i][fkeys[:, i]].astype(acc) for i in range(m)]
     fvalid = fmask.astype(acc)
     vol_fact = fvalid
@@ -99,6 +108,16 @@ def _device_fct_local(fact, dims, *, domains: Tuple[int, ...], vocab: int,
             others, mode="drop")
         (dtext, dkeys, dmask) = routed_dims[i]
         dim_vols.append(contrib[dkeys] * dmask.astype(acc))
+    return vol_fact, dim_vols
+
+
+def _device_fct_local(fact, dims, *, domains: Tuple[int, ...], vocab: int,
+                      histogram_backend: str):
+    """One worker's MR¹+MR² for one CN, WITHOUT the final cross-worker psum
+    (the runtime engine vmaps this over a batch of CNs and psums once)."""
+    routed_fact, routed_dims = _route_cn(fact, dims)
+    vol_fact, dim_vols = _mr1_volumes(routed_fact, routed_dims, domains)
+    ftext = routed_fact[0]
 
     # --- MR2: weighted histograms + global aggregation ---
     hist = weighted_histogram(ftext, vol_fact, vocab,
@@ -160,34 +179,16 @@ def run_cn_plan(plan: CNPlan, mesh: Mesh,
 # ---------------------------------------------------------------------------
 
 def _device_job1(fact, dims, *, domains):
-    """MR1 only: route + num-arrays + volumes.  Returns the vol-arrays
-    artifact {text, vol} per relation — the paper's reducer output that
-    MapReduce2nd consumes (and the natural checkpoint boundary)."""
-    acc = _acc_dtype()
-    ftext, fkeys, fmask = _route(fact["text"], fact["keys"], fact["send"])
-    routed_dims = [_route(d["text"], d["keys"], d["send"]) for d in dims]
-    m = len(dims)
-    nums = []
-    for (dtext, dkeys, dmask), dom in zip(routed_dims, domains):
-        nums.append(jnp.zeros((dom,), jnp.int32).at[dkeys].add(
-            dmask.astype(jnp.int32), mode="drop"))
-    probes = [nums[i][fkeys[:, i]].astype(acc) for i in range(m)]
-    fvalid = fmask.astype(acc)
-    vol_fact = fvalid
-    for pr in probes:
-        vol_fact = vol_fact * pr
-    out = {"fact": {"text": ftext, "vol": vol_fact}, "dims": []}
-    for i in range(m):
-        others = fvalid
-        for j in range(m):
-            if j != i:
-                others = others * probes[j]
-        contrib = jnp.zeros((domains[i],), acc).at[fkeys[:, i]].add(
-            others, mode="drop")
-        (dtext, dkeys, dmask) = routed_dims[i]
-        out["dims"].append({"text": dtext,
-                            "vol": contrib[dkeys] * dmask.astype(acc)})
-    return out
+    """MR1 only: route + num-arrays + volumes (via the shared `_route_cn` /
+    `_mr1_volumes` helpers).  Returns the vol-arrays artifact {text, vol}
+    per relation — the paper's reducer output that MapReduce2nd consumes
+    (and the natural checkpoint boundary)."""
+    routed_fact, routed_dims = _route_cn(fact, dims)
+    vol_fact, dim_vols = _mr1_volumes(routed_fact, routed_dims, domains)
+    return {"fact": {"text": routed_fact[0], "vol": vol_fact},
+            "dims": [{"text": dtext, "vol": w}
+                     for (dtext, dkeys, dmask), w
+                     in zip(routed_dims, dim_vols)]}
 
 
 def _device_job2(vol_arrays, *, vocab, histogram_backend):
@@ -211,7 +212,7 @@ def run_cn_plan_two_jobs(plan: CNPlan, mesh: Mesh,
     Both jobs' executables live in the runtime's shared compile cache (keyed
     by the plan's bucketed shape signature), so repeated plans re-jit nothing.
     """
-    from repro.runtime.batch import pad_plan_arrays, plan_signature
+    from repro.runtime.batch import pad_plan_arrays, plan_signature, x64_flag
     from repro.runtime.cache import default_cache
     if cache is None:
         cache = default_cache()
@@ -223,7 +224,7 @@ def run_cn_plan_two_jobs(plan: CNPlan, mesh: Mesh,
     specs_rel = {"text": shard, "keys": shard, "send": shard}
     vol_spec = {"fact": {"text": shard, "vol": shard},
                 "dims": [{"text": shard, "vol": shard}] * m}
-    x64 = bool(jax.config.jax_enable_x64)
+    x64 = x64_flag()
     job1 = cache.get_or_build(
         ("fct_job1", sig, mesh, x64),
         lambda: shard_map(

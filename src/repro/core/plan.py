@@ -6,6 +6,16 @@ query on the host as dense index tables.  Devices execute the plan with
 static shapes only (gather -> all_to_all -> compute); they never hash keys or
 make routing decisions.
 
+A ``CNPlan`` is a lightweight *descriptor*: per relation it holds a
+:class:`RelationRef` — the identity of the tuple-set columns (row indices
+into the base relation plus a content fingerprint, the key of the
+device-resident :class:`repro.runtime.store.RelationStore`) — and the per-CN
+``send`` routing table.  The big ``text``/``keys`` columns are NOT copied
+into the plan; legacy consumers materialize them on demand through the
+``RelationRoute.text`` / ``.keys`` properties, while the engine's store path
+uploads each tuple-set relation to the device mesh once per session and
+ships only the kilobyte-sized ``send`` tables per dispatch.
+
 Replication accounting: a dimension row needed by several tasks on the SAME
 device is sent once (paper Corollary 2, "data filtering"), so the measured
 shuffle bytes equal  Σ_i |D_i| · (unique destination devices per row)  which
@@ -14,6 +24,7 @@ the shares optimizer minimizes with its  Σ_i d_i·k/a_i  model.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -27,14 +38,129 @@ from repro.core.skew import (Schedule, estimate_task_costs, lpt_schedule,
 from repro.data.schema import PAD_ID, StarSchema
 
 
+def _shard_rows(arr: np.ndarray, P: int, pad_value: int) -> np.ndarray:
+    rows = arr.shape[0]
+    S = max(1, math.ceil(rows / P))
+    pad = P * S - rows
+    if pad:
+        pad_block = np.full((pad,) + arr.shape[1:], pad_value, arr.dtype)
+        arr = np.concatenate([arr, pad_block], axis=0)
+    return arr.reshape((P, S) + arr.shape[1:])
+
+
+@dataclasses.dataclass
+class RelationRef:
+    """Identity + lazy materialization of one tuple-set relation's columns.
+
+    Owns no column copies: ``rows`` indexes into the base relation's arrays
+    (shared references).  ``uid`` is a content fingerprint over the row
+    indices — stable across replanning of the same tuple set, so it keys
+    the session's device-resident RelationStore.  The base arrays are
+    assumed immutable for the life of the owning session; data mutations
+    must go through the serving layer's ``invalidate`` hooks.
+    """
+
+    role: str                            # "fact" | "dim"
+    name: str                            # base relation name
+    rows: np.ndarray                     # tuple-set row indices into the base
+    base_text: np.ndarray                # [R, L] shared reference, not a copy
+    base_keys: Tuple[np.ndarray, ...]    # key columns, shared references
+    n_devices: int
+    uid: Tuple = None
+
+    def __post_init__(self) -> None:
+        if self.uid is None:
+            digest = hashlib.blake2b(np.ascontiguousarray(self.rows).tobytes(),
+                                     digest_size=8).hexdigest()
+            self.uid = (self.role, self.name, len(self.rows), digest,
+                        self.n_devices)
+
+    # -- static shape metadata (no materialization) -------------------------
+
+    @property
+    def n_rows(self) -> int:
+        return int(len(self.rows))
+
+    @property
+    def shard_rows(self) -> int:
+        """Per-device rows S after row-sharding over the mesh."""
+        return max(1, math.ceil(self.n_rows / self.n_devices))
+
+    @property
+    def text_len(self) -> int:
+        return int(self.base_text.shape[1])
+
+    @property
+    def key_width(self) -> int:
+        return len(self.base_keys)
+
+    # -- on-demand host materialization -------------------------------------
+
+    def text_shards(self) -> np.ndarray:
+        """[P, S, L] int32 tuple-set text, row-sharded and PAD padded."""
+        return _shard_rows(self.base_text[self.rows], self.n_devices,
+                           PAD_ID).astype(np.int32, copy=False)
+
+    def dim_key_shards(self) -> np.ndarray:
+        """[P, S] int32 join-key column (dim relations)."""
+        (col,) = self.base_keys
+        return _shard_rows(col[self.rows].astype(np.int32, copy=False),
+                           self.n_devices, 0)
+
+    def fact_key_shards(self, cols: Sequence[int]) -> np.ndarray:
+        """[P, S, len(cols)] int32 selected fact key columns."""
+        stacked = np.stack([self.base_keys[i][self.rows] for i in cols],
+                           axis=1).astype(np.int32, copy=False)
+        return _shard_rows(stacked, self.n_devices, 0)
+
+    def store_columns(self, rows_pad: int,
+                      text_pad: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(text, keys) host arrays padded for a RelationStore upload.
+
+        Text is padded to ``[P, rows_pad, text_pad]`` with PAD_ID; keys are
+        FULL-width for the fact (``[P, rows_pad, m_all]`` — the engine's
+        device program selects each CN's columns with a small gathered
+        index, so one upload serves every CN over this tuple set) and
+        ``[P, rows_pad]`` for a dim.  Padded rows are never named by any
+        send table, so the fill values are semantics-free.
+        """
+        text = self.text_shards()
+        P, S, L = text.shape
+        text = np.pad(text, ((0, 0), (0, rows_pad - S), (0, text_pad - L)),
+                      constant_values=PAD_ID)
+        if self.role == "fact":
+            keys = self.fact_key_shards(range(self.key_width))
+            keys = np.pad(keys, ((0, 0), (0, rows_pad - S), (0, 0)),
+                          constant_values=0)
+        else:
+            keys = np.pad(self.dim_key_shards(),
+                          ((0, 0), (0, rows_pad - S)), constant_values=0)
+        return text, keys
+
+
 @dataclasses.dataclass
 class RelationRoute:
-    """Sharded relation + static send table for one relation of one CN."""
+    """Routing descriptor for one relation of one CN: a store handle
+    (:class:`RelationRef`) plus the static per-CN send table — the only
+    per-dispatch payload on the store path.  ``text``/``keys`` materialize
+    the legacy sharded host arrays on demand (seed and two-job paths)."""
 
-    text: np.ndarray     # int32 [P, S, L]   row-sharded input (padded)
-    keys: np.ndarray     # int32 [P, S] (dim) or [P, S, m_inc] (fact)
+    ref: RelationRef
     send: np.ndarray     # int32 [P, P, C]   local row idx to send, -1 pad
     sent_rows: int       # total routed rows (shuffle volume, rows)
+    key_cols: Optional[Tuple[int, ...]] = None  # fact: included dim ids
+
+    @property
+    def text(self) -> np.ndarray:
+        """int32 [P, S, L] row-sharded tuple-set text (materialized)."""
+        return self.ref.text_shards()
+
+    @property
+    def keys(self) -> np.ndarray:
+        """int32 [P, S] (dim) or [P, S, m_inc] (fact) keys (materialized)."""
+        if self.key_cols is None:
+            return self.ref.dim_key_shards()
+        return self.ref.fact_key_shards(self.key_cols)
 
     @property
     def capacity(self) -> int:
@@ -56,17 +182,7 @@ class CNPlan:
 
     @property
     def n_devices(self) -> int:
-        return int(self.fact.text.shape[0])
-
-
-def _shard_rows(arr: np.ndarray, P: int, pad_value: int) -> np.ndarray:
-    rows = arr.shape[0]
-    S = max(1, math.ceil(rows / P))
-    pad = P * S - rows
-    if pad:
-        pad_block = np.full((pad,) + arr.shape[1:], pad_value, arr.dtype)
-        arr = np.concatenate([arr, pad_block], axis=0)
-    return arr.reshape((P, S) + arr.shape[1:])
+        return int(self.fact.ref.n_devices)
 
 
 def _send_table(pairs_src: np.ndarray, pairs_dst: np.ndarray,
@@ -145,31 +261,30 @@ def build_cn_plan(schema: StarSchema, ts: TupleSets, cn: StarCN,
     # --- fact routing: each row to exactly one device ---
     fact_dst = t2d[fact_tasks]
     keep = fact_dst >= 0
-    fkeys = np.stack(fact_key_cols, axis=1).astype(np.int32)
-    ftext = schema.fact.text[fact_idx]
-    # compact: planner only ships tuple-set rows (map-side keyword filter)
-    ftext_sh = _shard_rows(ftext, P, PAD_ID)
-    fkeys_sh = _shard_rows(fkeys, P, 0)
-    S_f = ftext_sh.shape[1]
+    fact_ref = RelationRef(role="fact", name=schema.fact.name, rows=fact_idx,
+                           base_text=schema.fact.text,
+                           base_keys=tuple(schema.fact_keys(i)
+                                           for i in range(schema.m)),
+                           n_devices=P)
+    S_f = fact_ref.shard_rows
     rows = np.arange(len(fact_idx))
     src = (rows // S_f).astype(np.int32)
     local = (rows % S_f).astype(np.int32)
     table, sent_f = _send_table(src[keep], fact_dst[keep].astype(np.int32),
                                 local[keep], P)
-    fact_route = RelationRoute(text=ftext_sh.astype(np.int32),
-                               keys=fkeys_sh, send=table, sent_rows=sent_f)
+    fact_route = RelationRoute(ref=fact_ref, send=table, sent_rows=sent_f,
+                               key_cols=inc)
 
     # --- dim routing: each row to every device owning a matching task ---
     dims: Dict[int, RelationRoute] = {}
     shuffle_rows = sent_f
-    shuffle_bytes = sent_f * 4 * (ftext.shape[1] + m)
+    shuffle_bytes = sent_f * 4 * (fact_ref.text_len + m)
     for p, i in enumerate(inc):
         rows_i = dim_idx[i]
-        dkeys = schema.dim_keys(i)[rows_i].astype(np.int32)
-        dtext = schema.dims[i].text[rows_i]
-        dtext_sh = _shard_rows(dtext, P, PAD_ID)
-        dkeys_sh = _shard_rows(dkeys[:, None], P, 0)[..., 0]
-        S_d = dtext_sh.shape[1]
+        dim_ref = RelationRef(role="dim", name=schema.dims[i].name,
+                              rows=rows_i, base_text=schema.dims[i].text,
+                              base_keys=(schema.dim_keys(i),), n_devices=P)
+        S_d = dim_ref.shard_rows
         r = np.arange(len(rows_i))
         src_d = (r // S_d).astype(np.int32)
         local_d = (r % S_d).astype(np.int32)
@@ -195,10 +310,9 @@ def build_cn_plan(schema: StarSchema, ts: TupleSets, cn: StarCN,
             table_d, sent_d = _send_table(pair_src, pair_dst, pair_loc, P)
         else:
             table_d, sent_d = np.full((P, P, 1), -1, np.int32), 0
-        dims[i] = RelationRoute(text=dtext_sh.astype(np.int32),
-                                keys=dkeys_sh, send=table_d, sent_rows=sent_d)
+        dims[i] = RelationRoute(ref=dim_ref, send=table_d, sent_rows=sent_d)
         shuffle_rows += sent_d
-        shuffle_bytes += sent_d * 4 * (dtext.shape[1] + 1)
+        shuffle_bytes += sent_d * 4 * (dim_ref.text_len + 1)
 
     return CNPlan(cn=cn, included=inc, shares=grid_shares, schedule=schedule,
                   fact=fact_route, dims=dims,

@@ -233,7 +233,8 @@ def main() -> None:
               f"{t['windows_flushed']} (mean {t['mean_window_queries']} "
               f"q/window, peak {t['max_window_queries']}) | executables "
               f"{t['entries']} ({t['hits']}h {t['traces']}t "
-              f"{t['evictions']}e) | stacks {t['stack_hits']}h", flush=True)
+              f"{t['evictions']}e) | store {t['store_hits']}h/"
+              f"{t['store_uploads']}u", flush=True)
     print(f"# gateway: {st['gateway']['submitted']} submitted across "
           f"{st['gateway']['tenants']} tenants", flush=True)
     if args.smoke:

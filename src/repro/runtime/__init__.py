@@ -1,6 +1,9 @@
-"""FCT query execution runtime: shape bucketing, compiled-executable caching
-and batched multi-CN dispatch (see README.md in this directory)."""
+"""FCT query execution runtime: shape bucketing, compiled-executable caching,
+batched multi-CN dispatch and the device-resident relation store (see
+README.md in this directory)."""
 from repro.runtime.cache import ExecutableCache, default_cache
 from repro.runtime.engine import FCTEngine, default_engine
+from repro.runtime.store import RelationStore
 
-__all__ = ["ExecutableCache", "FCTEngine", "default_cache", "default_engine"]
+__all__ = ["ExecutableCache", "FCTEngine", "RelationStore", "default_cache",
+           "default_engine"]

@@ -22,12 +22,21 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Sequence, Tuple
 
+import jax
 import numpy as np
 
 from repro.core.plan import CNPlan, RelationRoute
 from repro.data.schema import PAD_ID
 
 BUCKET_MIN = 8
+
+
+def x64_flag() -> bool:
+    """The ``jax_enable_x64`` predicate every runtime cache key must share:
+    executables (engine), device-resident columns (store) and the two-job
+    programs key on exactly this, so arrays uploaded under one mode can
+    never be served to a program compiled under the other."""
+    return bool(jax.config.jax_enable_x64)
 
 
 def bucket_pow2(n: int, minimum: int = BUCKET_MIN) -> int:
@@ -39,12 +48,18 @@ def bucket_pow2(n: int, minimum: int = BUCKET_MIN) -> int:
 @dataclasses.dataclass(frozen=True)
 class RelationSig:
     """Padded dims of one routed relation: [P, rows, text_len] text,
-    [P, P, cap] send table, key domain (0 for the fact side)."""
+    [P, P, cap] send table, key domain (0 for the fact side).
+
+    ``key_width`` is the fact relation's FULL key-column count (0 for dims):
+    the store-path device program takes the full-width stored key matrix
+    [P, rows, key_width] plus a per-CN column-index gather, so its shapes —
+    and hence the executable-cache key — depend on it."""
 
     rows: int
     cap: int
     text_len: int
     domain: int = 0
+    key_width: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,28 +78,35 @@ class PlanSignature:
         return len(self.dims)
 
 
-def _route_sig(route: RelationRoute, domain: int, bucket: bool) -> RelationSig:
-    _, S, L = route.text.shape
+def _route_sig(route: RelationRoute, domain: int, bucket: bool,
+               key_width: int = 0) -> RelationSig:
+    # descriptor metadata only — computing a signature must not materialize
+    # the (lazy) column arrays
+    S, L = route.ref.shard_rows, route.ref.text_len
     C = route.send.shape[-1]
     if bucket:
         S, C, L = bucket_pow2(S), bucket_pow2(C), bucket_pow2(L)
         domain = bucket_pow2(domain) if domain else 0
-    return RelationSig(rows=S, cap=C, text_len=L, domain=domain)
+    return RelationSig(rows=S, cap=C, text_len=L, domain=domain,
+                       key_width=key_width)
 
 
 def plan_signature(plan: CNPlan, bucket: bool = True) -> PlanSignature:
     dims = tuple(_route_sig(plan.dims[i], plan.key_domains[i], bucket)
                  for i in plan.included)
+    fact = _route_sig(plan.fact, 0, bucket,
+                      key_width=plan.fact.ref.key_width)
     return PlanSignature(n_devices=plan.n_devices, vocab=plan.vocab_size,
-                         fact=_route_sig(plan.fact, 0, bucket), dims=dims)
+                         fact=fact, dims=dims)
 
 
 def _pad_route(route: RelationRoute, sig: RelationSig) -> Dict[str, np.ndarray]:
-    P, S, L = route.text.shape
-    text = np.pad(route.text, ((0, 0), (0, sig.rows - S), (0, sig.text_len - L)),
+    rtext, rkeys = route.text, route.keys   # materialize the lazy columns once
+    P, S, L = rtext.shape
+    text = np.pad(rtext, ((0, 0), (0, sig.rows - S), (0, sig.text_len - L)),
                   constant_values=PAD_ID)
-    key_pad = ((0, 0), (0, sig.rows - S)) + ((0, 0),) * (route.keys.ndim - 2)
-    keys = np.pad(route.keys, key_pad, constant_values=0)
+    key_pad = ((0, 0), (0, sig.rows - S)) + ((0, 0),) * (rkeys.ndim - 2)
+    keys = np.pad(rkeys, key_pad, constant_values=0)
     send = np.pad(route.send, ((0, 0), (0, 0), (0, sig.cap - route.send.shape[-1])),
                   constant_values=-1)
     return {"text": text, "keys": keys, "send": send}

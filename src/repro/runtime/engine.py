@@ -10,7 +10,17 @@ planning:
      cross-worker aggregation is a single psum — so a query costs one device
      dispatch and one host transfer per signature, not per CN,
   4. memoize the jitted executables in an ExecutableCache keyed by
-     (signature, N, histogram backend, mesh), so warm queries never retrace.
+     (signature, N, histogram backend, mesh), so warm queries never retrace,
+  5. with a session's RelationStore (store.py), gather the tuple-set
+     ``text``/``keys`` columns from DEVICE-RESIDENT arrays inside the
+     shard_map program: the store uploads each tuple-set relation once per
+     session, and a dispatch ships only the stacked send tables plus the
+     fact key-column indices — kilobytes of routing metadata instead of
+     megabytes of columns.  Because the store is content-addressed and
+     composition-independent, multi-query per-CN batches reuse the same
+     uploads as single-query dispatches (this subsumes the PR 3 stacked-
+     array cache, whose reuse was limited to deterministic group
+     compositions).
 
 ``run_plans`` returns the group-summed total (one vocab-sized transfer per
 group); ``run_plans_individual`` keeps the per-CN axis on the output so CNs
@@ -42,15 +52,12 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.plan import CNPlan
 from repro.runtime.batch import (PlanSignature, group_plan_indices,
-                                 pad_cn_axis, plan_signature, stack_group)
+                                 pad_cn_axis, plan_signature, stack_group,
+                                 x64_flag)
 from repro.runtime.cache import ExecutableCache, default_cache
 
 
 CN_BUCKET_MIN = 4  # floor for bucketing the per-CN-output programs' N axis
-
-
-def _x64_enabled() -> bool:
-    return bool(jax.config.jax_enable_x64)
 
 
 def _check_int32_totals(arr: np.ndarray) -> None:
@@ -67,33 +74,78 @@ def _check_int32_totals(arr: np.ndarray) -> None:
             "device histograms")
 
 
+def _vmapped_cns(fact, dims, sig: PlanSignature, histogram_backend: str,
+                 reduce_cns: bool):
+    """Per-device body shared by both program families: vmap the one-CN
+    MR¹+MR² over the leading CN axis, then one psum over the worker axis."""
+    from repro.core.fct import _device_fct_local
+    domains = tuple(d.domain for d in sig.dims)
+
+    def one_cn(f, ds):
+        return _device_fct_local(f, ds, domains=domains, vocab=sig.vocab,
+                                 histogram_backend=histogram_backend)
+
+    hists = jax.vmap(one_cn)(fact, dims)            # [N, vocab]
+    if reduce_cns:
+        return lax.psum(jnp.sum(hists, axis=0), "w")  # one psum per group
+    return lax.psum(hists, "w")                     # per-CN, one psum
+
+
 def _build_batched_fn(sig: PlanSignature, mesh: Mesh, histogram_backend: str,
                       reduce_cns: bool = True):
-    """shard_map program over stacked [N, P, ...] relations.
+    """shard_map program over host-stacked [N, P, ...] relations.
 
     ``reduce_cns=True``  -> freq[vocab]     (CN axis summed on device)
     ``reduce_cns=False`` -> freq[N, vocab]  (per-CN totals, for callers that
     attribute CNs of one batch to different queries)
     """
-    from repro.core.fct import _device_fct_local
-    domains = tuple(d.domain for d in sig.dims)
     shard = P(None, "w")
     spec = {"text": shard, "keys": shard, "send": shard}
 
     def device_fn(fact, dims):
         fact = {k: jnp.squeeze(v, 1) for k, v in fact.items()}
         dims = [{k: jnp.squeeze(v, 1) for k, v in d.items()} for d in dims]
-
-        def one_cn(f, ds):
-            return _device_fct_local(f, ds, domains=domains, vocab=sig.vocab,
-                                     histogram_backend=histogram_backend)
-
-        hists = jax.vmap(one_cn)(fact, dims)            # [N, vocab]
-        if reduce_cns:
-            return lax.psum(jnp.sum(hists, axis=0), "w")  # one psum per group
-        return lax.psum(hists, "w")                     # per-CN, one psum
+        return _vmapped_cns(fact, dims, sig, histogram_backend, reduce_cns)
 
     return shard_map(device_fn, mesh=mesh, in_specs=(spec, [spec] * sig.m),
+                     out_specs=P(), check_rep=False)
+
+
+def _build_store_fn(sig: PlanSignature, mesh: Mesh, histogram_backend: str,
+                    n_stack: int, reduce_cns: bool = True):
+    """shard_map program whose relation columns are STORE-RESIDENT.
+
+    Inputs per relation are ``n_stack`` separate device arrays (one per CN
+    slot, each [P, S, ...] sharded P("w") and living in the session's
+    RelationStore) plus the host-shipped stacked send tables; the fact
+    additionally carries per-CN key-column indices that gather each CN's
+    columns out of the full-width stored key matrix (core.fct._route_cn).
+    The per-device body stacks its local shards along the CN axis and runs
+    the same vmapped MR¹+MR² as the host-stacked family — outputs are
+    bit-identical.
+    """
+    col = P("w")
+    rel_spec = {"text": [col] * n_stack, "keys": [col] * n_stack,
+                "send": P(None, "w")}
+    fact_spec = dict(rel_spec)
+    fact_spec["cols"] = P()
+
+    def device_fn(fact, dims):
+        def stack(rel):
+            out = {"text": jnp.stack([jnp.squeeze(t, 0)
+                                      for t in rel["text"]]),
+                   "keys": jnp.stack([jnp.squeeze(k, 0)
+                                      for k in rel["keys"]]),
+                   "send": jnp.squeeze(rel["send"], 1)}
+            if "cols" in rel:
+                out["cols"] = rel["cols"]
+            return out
+
+        return _vmapped_cns(stack(fact), [stack(d) for d in dims], sig,
+                            histogram_backend, reduce_cns)
+
+    return shard_map(device_fn, mesh=mesh,
+                     in_specs=(fact_spec, [rel_spec] * sig.m),
                      out_specs=P(), check_rep=False)
 
 
@@ -104,6 +156,11 @@ class FCTEngine:
     ``batch=False`` dispatches one program per CN (still cached/bucketed);
     ``bucket=False`` keys on exact shapes (still cached/batched).  The
     default engine (``default_engine()``) shares the process-wide cache.
+
+    ``bytes_shipped`` counts host→device argument bytes per dispatch;
+    ``column_bytes_shipped`` is the text/keys portion of that — zero on the
+    store path, where columns are device-resident (store uploads are
+    accounted by the RelationStore itself).
     """
 
     def __init__(self, cache: Optional[ExecutableCache] = None,
@@ -113,8 +170,8 @@ class FCTEngine:
         self.bucket = bucket
         self.batches_run = 0
         self.cns_run = 0
-        self.stack_hits = 0
-        self.stack_misses = 0
+        self.bytes_shipped = 0
+        self.column_bytes_shipped = 0
 
     def _group(self, plans: Sequence[CNPlan]
                ) -> List[Tuple[PlanSignature, List[int]]]:
@@ -126,7 +183,7 @@ class FCTEngine:
 
     def _dispatch(self, sig: PlanSignature, group: Sequence[CNPlan],
                   mesh: Mesh, histogram_backend: str, reduce_cns: bool,
-                  stack_cache: Optional[dict] = None):
+                  store=None):
         """Enqueue one stacked group on the device; returns the LAZY result
         (jax async dispatch) — callers block via ``_collect``.
 
@@ -138,31 +195,43 @@ class FCTEngine:
         summed family keeps exact N (deterministic per request, no padded
         compute on the latency-critical single-query path).
 
-        ``stack_cache`` (signature -> stacked host arrays) lets a caller
-        whose group composition is deterministic — one planned query, whose
-        signature groups never change — skip the per-call pad/stack memcpy
-        on warm dispatches.  ``stack_hits``/``stack_misses`` count reuse.
+        With a ``store`` (RelationStore), relation columns are gathered from
+        device-resident arrays: only the send tables and fact key-column
+        indices are shipped per dispatch; warm dispatches (store hits) ship
+        ZERO column bytes.  Without one, the legacy host pad/stack path is
+        used (the pre-store engine — kept as the equivalence baseline and
+        for storeless callers).
         """
-        if stack_cache is not None:
-            stacked = stack_cache.get(sig)
-            if stacked is None:
-                self.stack_misses += 1
-                stacked = stack_cache[sig] = stack_group(group, sig)
-            else:
-                self.stack_hits += 1
-            fact, dims = stacked
-        else:
-            fact, dims = stack_group(group, sig)
-        kind = "fct_batched" if reduce_cns else "fct_batched_percn"
         n_stack = len(group)
         if not reduce_cns and self.bucket:
             n_stack = -(-n_stack // CN_BUCKET_MIN) * CN_BUCKET_MIN
-            fact, dims = pad_cn_axis(fact, dims, n_stack)
-        key = (kind, sig, n_stack, histogram_backend, mesh, _x64_enabled())
-        fn = self.cache.get_or_build(
-            key, lambda sig=sig: _build_batched_fn(sig, mesh,
-                                                   histogram_backend,
-                                                   reduce_cns=reduce_cns))
+        x64 = x64_flag()
+        if store is not None:
+            from repro.runtime.store import store_group_args
+            (fact, dims), shipped = store_group_args(store, group, sig,
+                                                     n_stack)
+            kind = "fct_store" if reduce_cns else "fct_store_percn"
+            key = (kind, sig, n_stack, histogram_backend, mesh, x64)
+            fn = self.cache.get_or_build(
+                key, lambda: _build_store_fn(sig, mesh, histogram_backend,
+                                             n_stack,
+                                             reduce_cns=reduce_cns))
+            self.bytes_shipped += shipped
+        else:
+            fact, dims = stack_group(group, sig)
+            if n_stack > len(group):
+                fact, dims = pad_cn_axis(fact, dims, n_stack)
+            kind = "fct_batched" if reduce_cns else "fct_batched_percn"
+            key = (kind, sig, n_stack, histogram_backend, mesh, x64)
+            fn = self.cache.get_or_build(
+                key, lambda: _build_batched_fn(sig, mesh, histogram_backend,
+                                               reduce_cns=reduce_cns))
+            shipped = sum(v.nbytes for v in fact.values()) + sum(
+                v.nbytes for d in dims for v in d.values())
+            columns = shipped - fact["send"].nbytes - sum(
+                d["send"].nbytes for d in dims)
+            self.bytes_shipped += shipped
+            self.column_bytes_shipped += columns
         out = fn(fact, dims)
         self.batches_run += 1
         self.cns_run += len(group)
@@ -176,8 +245,7 @@ class FCTEngine:
 
     def dispatch_plans(self, plans: Sequence[CNPlan], mesh: Mesh,
                        histogram_backend: str = "auto",
-                       individual: bool = False,
-                       stack_cache: Optional[dict] = None):
+                       individual: bool = False, store=None):
         """Async half of a run: enqueue every signature group and return a
         pending handle ``[(plan_indices, lazy_result), ...]``.
 
@@ -186,22 +254,19 @@ class FCTEngine:
         ``collect_individual``.  ``individual=True`` keeps the per-CN output
         axis so CNs of different queries can share a dispatch.
 
-        ``stack_cache`` memoizes the padded/stacked host arrays per
-        signature (the ROADMAP stacked-array-caching item).  It is only
-        honoured on the summed (``individual=False``) family of a batching
-        engine: per-CN-output group compositions vary with the caller's
-        batch mix, and an unbatched engine emits one singleton group per
-        plan so one signature can recur within a dispatch — in both cases a
-        signature-keyed stack would silently serve the wrong plan's arrays.
+        ``store`` (a RelationStore bound to this mesh) makes relation
+        columns device-resident: each tuple-set relation is uploaded once
+        and referenced by every later dispatch — across warm repeats,
+        program families, AND batch compositions (content-addressed, unlike
+        the retired PR 3 stack cache, which was limited to deterministic
+        single-query groups).
         """
         if not plans:
             raise ValueError("dispatch_plans needs at least one plan")
-        if individual or not self.batch:
-            stack_cache = None
         return [(idxs, self._dispatch(sig, [plans[i] for i in idxs], mesh,
                                       histogram_backend,
                                       reduce_cns=not individual,
-                                      stack_cache=stack_cache))
+                                      store=store))
                 for sig, idxs in self._group(plans)]
 
     def collect_total(self, pending, vocab: int) -> np.ndarray:
@@ -220,13 +285,15 @@ class FCTEngine:
         return out
 
     def run_plans(self, plans: Sequence[CNPlan], mesh: Mesh,
-                  histogram_backend: str = "auto") -> np.ndarray:
+                  histogram_backend: str = "auto", store=None) -> np.ndarray:
         """Total freq[vocab] (int64) over all joined-CN plans."""
-        pending = self.dispatch_plans(plans, mesh, histogram_backend)
+        pending = self.dispatch_plans(plans, mesh, histogram_backend,
+                                      store=store)
         return self.collect_total(pending, plans[0].vocab_size)
 
     def run_plans_individual(self, plans: Sequence[CNPlan], mesh: Mesh,
-                             histogram_backend: str = "auto") -> np.ndarray:
+                             histogram_backend: str = "auto",
+                             store=None) -> np.ndarray:
         """Per-plan freq[len(plans), vocab] (int64).
 
         Plans from different queries may share one device dispatch (same
@@ -234,15 +301,15 @@ class FCTEngine:
         caller attribute each histogram to its owning query.
         """
         pending = self.dispatch_plans(plans, mesh, histogram_backend,
-                                      individual=True)
+                                      individual=True, store=store)
         return self.collect_individual(pending, len(plans),
                                        plans[0].vocab_size)
 
     def stats(self) -> dict:
         out = self.cache.stats()
         out.update(batches_run=self.batches_run, cns_run=self.cns_run,
-                   stack_hits=self.stack_hits,
-                   stack_misses=self.stack_misses)
+                   bytes_shipped=self.bytes_shipped,
+                   column_bytes_shipped=self.column_bytes_shipped)
         return out
 
 

@@ -1,0 +1,198 @@
+"""Device-resident relation store: tuple-set columns live on the mesh once.
+
+The paper's MapReduce jobs re-ship every CN's tuple-set relations on every
+query; the PR 1-3 runtime inherited that shape — each dispatch stacked the
+routed ``text``/``keys`` columns on the host and paid a full host→device
+transfer of data that is identical across CNs, queries and tenants.  This
+module is the "aggregation equal transformation" idea taken to its logical
+end for an accelerator runtime: the statistics *input* never leaves the
+workers either.  Following the replication-cost analysis of Afrati & Ullman
+(PAPERS.md) and the shares/hypercube line in ``core/shares.py``, only the
+small routing metadata (send tables, key-column indices) is replicated per
+dispatch; the big columns are uploaded ONCE per (session, tuple set).
+
+``RelationStore`` maps a :class:`repro.core.plan.RelationRef`'s content
+fingerprint to device arrays sharded ``P("w")`` over the mesh, padded to the
+engine's pow-2 bucket dims so one upload serves every program built for that
+signature.  Fact keys are stored FULL width (all ``m`` columns); the device
+program selects each CN's columns with a gathered index, so CNs with
+different dimension subsets reuse one upload.  Entries are LRU with an
+optional byte budget (``max_bytes``); eviction just drops the device buffer
+— a later dispatch re-uploads from the descriptor (a counted miss).
+
+Counters follow the runtime convention: ``store_uploads`` / ``store_hits``
+(reuse), ``store_upload_bytes`` (cumulative host→device column traffic),
+``store_bytes`` (currently resident), ``store_evictions``.  Sessions expose
+them through ``stats()`` and per-response engine deltas, so tests and the
+``multi_query`` benchmark can assert that warm queries ship ZERO relation
+columns.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.plan import CNPlan, RelationRef
+from repro.runtime.batch import PlanSignature, RelationSig, x64_flag
+from repro.runtime.cache import LruDict
+
+
+class StoredColumns(NamedTuple):
+    """One tuple-set relation's device-resident padded columns."""
+
+    text: jax.Array      # [P, rows_pad, text_pad] int32, sharded P("w")
+    keys: jax.Array      # [P, rows_pad(, m_all)] int32, sharded P("w")
+    nbytes: int
+
+
+class RelationStore:
+    """Content-addressed LRU of device-resident tuple-set columns.
+
+    One store serves one (schema, mesh) pair — the session owns it.  Keys
+    combine the RelationRef fingerprint, the padded dims (so exact-shape and
+    bucketed engines coexist) and the ``jax_enable_x64`` flag (programs and
+    arrays created under different x64 modes must not alias).
+    """
+
+    def __init__(self, mesh: Mesh, max_bytes: Optional[int] = None) -> None:
+        if max_bytes is not None and max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
+        self.mesh = mesh
+        self.max_bytes = max_bytes
+        self._sharding = NamedSharding(mesh, P("w"))
+        self._entries: LruDict = LruDict()   # key -> StoredColumns
+        self._lock = threading.Lock()
+        self.uploads = 0
+        self.hits = 0
+        self.evictions = 0
+        self.upload_bytes = 0
+        self.resident_bytes = 0
+        # bumped by clear(): an upload that started before an invalidation
+        # must not re-insert pre-invalidation columns after it
+        self.epoch = 0
+
+    # -- lookup / upload -----------------------------------------------------
+
+    def columns(self, ref: RelationRef, rows_pad: int,
+                text_pad: int) -> StoredColumns:
+        """The ref's device columns padded to (rows_pad, text_pad),
+        uploading them on first use (or after eviction)."""
+        key = (ref.uid, rows_pad, text_pad, x64_flag())
+        with self._lock:
+            cached = self._entries.hit(key)
+            if cached is not None:
+                self.hits += 1
+                return cached
+            epoch = self.epoch
+        text, keys = ref.store_columns(rows_pad, text_pad)  # outside the lock
+        nbytes = text.nbytes + keys.nbytes
+        stored = StoredColumns(
+            text=jax.device_put(text, self._sharding),
+            keys=jax.device_put(keys, self._sharding), nbytes=nbytes)
+        with self._lock:
+            raced = self._entries.hit(key)
+            if raced is not None:      # concurrent uploader won
+                self.hits += 1
+                return raced
+            if self.epoch != epoch:
+                # a clear() (data invalidation) overtook this upload: the
+                # columns may predate the mutation, and the row-index
+                # fingerprint cannot tell — serve this dispatch, cache
+                # nothing (the next reference re-reads the base arrays)
+                self.uploads += 1
+                self.upload_bytes += nbytes
+                return stored
+            self.uploads += 1
+            self.upload_bytes += nbytes
+            self.resident_bytes += nbytes
+            self._entries.put(key, stored)
+            if self.max_bytes is not None:
+                while (self.resident_bytes > self.max_bytes
+                       and len(self._entries) > 1):
+                    _, dropped = self._entries.popitem(last=False)
+                    self.resident_bytes -= dropped.nbytes
+                    self.evictions += 1
+            return stored
+
+    # -- lifecycle / introspection ------------------------------------------
+
+    def clear(self) -> int:
+        """Drop every device buffer (data-mutation invalidation hook);
+        returns the number of entries dropped."""
+        with self._lock:
+            dropped = len(self._entries)
+            self._entries.clear()
+            self.resident_bytes = 0
+            self.epoch += 1        # fence in-flight uploads (see columns())
+            return dropped
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"store_entries": len(self._entries),
+                    "store_uploads": self.uploads,
+                    "store_hits": self.hits,
+                    "store_evictions": self.evictions,
+                    "store_upload_bytes": self.upload_bytes,
+                    "store_bytes": self.resident_bytes}
+
+
+# ---------------------------------------------------------------------------
+# dispatch-time argument assembly (used by the engine)
+# ---------------------------------------------------------------------------
+
+def _pad_send(send: np.ndarray, cap: int) -> np.ndarray:
+    if send.shape[-1] == cap:
+        return send
+    return np.pad(send, ((0, 0), (0, 0), (0, cap - send.shape[-1])),
+                  constant_values=-1)
+
+
+def _null_send(n_devices: int, cap: int) -> np.ndarray:
+    return np.full((n_devices, n_devices, cap), -1, np.int32)
+
+
+def store_group_args(store: RelationStore, plans: Sequence[CNPlan],
+                     sig: PlanSignature, n_stack: int):
+    """Device arguments for one stacked signature group on the store path.
+
+    Returns ``((fact, dims), shipped_bytes)`` where ``fact`` / each dim slot
+    is ``{"text": [N device arrays], "keys": [N device arrays],
+    "send": [N, P, P, C] host, ...}`` — the only HOST payload is the stacked
+    send tables plus the fact's key-column indices (``shipped_bytes``
+    counts exactly that).  Slots past ``len(plans)`` are null plans: they
+    alias the first plan's store-resident columns and route nothing (all
+    ``-1`` send), contributing exactly zero to every histogram.
+    """
+    pad = n_stack - len(plans)
+
+    def one_relation(refs_sends: List[Tuple[RelationRef, np.ndarray]],
+                     rsig: RelationSig) -> Dict:
+        cols = [store.columns(ref, rsig.rows, rsig.text_len)
+                for ref, _ in refs_sends]
+        sends = [_pad_send(send, rsig.cap) for _, send in refs_sends]
+        if pad:
+            cols.extend([cols[0]] * pad)
+            P_dev = sends[0].shape[0]
+            sends.extend([_null_send(P_dev, rsig.cap)] * pad)
+        return {"text": [c.text for c in cols],
+                "keys": [c.keys for c in cols],
+                "send": np.stack(sends)}
+
+    fact = one_relation([(p.fact.ref, p.fact.send) for p in plans], sig.fact)
+    key_cols = [np.asarray(p.fact.key_cols, np.int32) for p in plans]
+    if pad:
+        key_cols.extend([key_cols[0]] * pad)
+    fact["cols"] = np.stack(key_cols)
+    dims = [one_relation([(p.dims[p.included[j]].ref,
+                           p.dims[p.included[j]].send) for p in plans], rsig)
+            for j, rsig in enumerate(sig.dims)]
+    shipped = fact["send"].nbytes + fact["cols"].nbytes + sum(
+        d["send"].nbytes for d in dims)
+    return (fact, dims), shipped

@@ -6,29 +6,43 @@ architecture):
     submit("tpch", req) ──► ResultCache (per tenant) ── hit ──► Future
                                  │ miss                        (resolved)
                                  ▼
+                            in-flight coalescing (identical query already
+                                 │ running? attach to its Future)
+                                 ▼
                             DynamicBatcher (per tenant, ~1ms window)
                                  ▼  query_batch: stacked dispatches
-                            FCTSession ──► runtime engine
+                            FCTSession ──► runtime engine + RelationStore
 
 ``submit`` resolves the request's keywords through the tenant's session
 (string/id spellings and permutations collapse onto one cache key), answers
 from the tenant's :class:`ResultCache` when possible — a hit costs zero
 engine dispatches and re-slices ``top_k`` from the memoized full histogram —
-and otherwise enqueues on the tenant's :class:`DynamicBatcher` so
-same-window queries share device dispatches.  Completed responses are
-inserted back into the result cache.
+coalesces onto an identical IN-FLIGHT query when one exists (the repeat
+attaches to the leader's Future instead of dispatching again; its response
+re-slices the leader's histogram and is marked ``coalesced``), and otherwise
+enqueues on the tenant's :class:`DynamicBatcher` so same-window queries
+share device dispatches.  Completed responses are inserted back into the
+result cache.
 
 Backpressure: at most ``max_inflight`` uncached requests may be unresolved
 gateway-wide; ``submit`` blocks (admission control) once the bound is hit,
-so a client burst cannot queue unbounded device work.  Cache hits bypass
-the bound — they consume no engine capacity.
+so a client burst cannot queue unbounded device work.  With
+``max_inflight_per_tenant`` set, each tenant additionally gets a private
+bound, so one tenant's burst cannot starve the others out of the
+gateway-wide budget.  Cache hits and coalesced followers bypass both bounds
+— they consume no engine capacity.
+
+``invalidate(schema)`` is the data-mutation hook: it drops the tenant's
+memoized results AND its session's data-derived state (tuple sets, routing
+plans, the device-resident relation store), so the next query replans and
+re-uploads against the mutated relations.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 from concurrent.futures import Future
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.api.request import FCTRequest, FCTResponse
 from repro.api.session import FCTSession
@@ -47,6 +61,8 @@ class GatewayConfig:
     result_cache_ttl_s: Optional[float] = 60.0  # None = no expiry, 0 = off
     result_cache_entries: int = 256     # per-tenant result-cache LRU bound
     max_inflight: int = 64              # gateway-wide uncached in-flight cap
+    max_inflight_per_tenant: Optional[int] = None  # per-tenant admission
+                                        # bound (None = gateway-wide only)
 
     def __post_init__(self) -> None:
         # fail at construction, not inside the first submit()'s lazy lane
@@ -54,6 +70,11 @@ class GatewayConfig:
         if self.max_inflight < 1:
             raise ValueError(
                 f"max_inflight must be >= 1, got {self.max_inflight}")
+        if (self.max_inflight_per_tenant is not None
+                and self.max_inflight_per_tenant < 1):
+            raise ValueError(
+                f"max_inflight_per_tenant must be >= 1 or None, got "
+                f"{self.max_inflight_per_tenant}")
         if self.batch_window_ms < 0:
             raise ValueError(
                 f"batch_window_ms must be >= 0, got {self.batch_window_ms}")
@@ -68,12 +89,33 @@ class GatewayConfig:
 
 
 @dataclasses.dataclass
+class _InflightEntry:
+    """One in-flight leader query: the result-cache generation observed at
+    its registration (an ``invalidate`` since then makes it STALE — later
+    identical requests must dispatch fresh rather than attach) and the
+    followers coalesced onto it.  Mutated only under the gateway lock while
+    the entry is registered."""
+
+    generation: int
+    followers: List[Tuple[Future, FCTRequest, tuple]] = \
+        dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
 class _Lane:
     """Per-tenant serving state, built lazily with the session."""
 
     session: FCTSession
     batcher: DynamicBatcher
     results: ResultCache
+    # canonical request key -> in-flight leader; guarded by the gateway
+    # lock.  An entry exists while one identical query is between admission
+    # and completion (a stale entry may be replaced by a fresh leader after
+    # an invalidate; each leader's relay removes only its OWN entry).
+    inflight: Dict[tuple, _InflightEntry] = dataclasses.field(
+        default_factory=dict)
+    sem: Optional[threading.Semaphore] = None   # per-tenant admission bound
+    coalesced: int = 0
 
 
 class Gateway:
@@ -103,6 +145,7 @@ class Gateway:
                 raise RuntimeError("gateway is closed")
             lane = self._lanes.get(schema)
             if lane is None:
+                per_tenant = self.config.max_inflight_per_tenant
                 lane = self._lanes[schema] = _Lane(
                     session=session,
                     batcher=DynamicBatcher(
@@ -110,7 +153,9 @@ class Gateway:
                         name=schema),
                     results=ResultCache(
                         max_entries=self.config.result_cache_entries,
-                        ttl_s=self.config.result_cache_ttl_s))
+                        ttl_s=self.config.result_cache_ttl_s),
+                    sem=(threading.Semaphore(per_tenant)
+                         if per_tenant is not None else None))
             return lane
 
     @staticmethod
@@ -119,22 +164,24 @@ class Gateway:
         return (tuple(sorted(resolved)), req.r_max, req.mode, req.rho,
                 req.sample_frac, req.salt)
 
-    def _serve_hit(self, lane: _Lane, cached: FCTResponse, req: FCTRequest,
-                   kws: Tuple[int, ...]) -> FCTResponse:
-        """Re-bind a memoized response to the incoming request: slice its
-        ``top_k`` from the cached full histogram (Def. 6 selection against
-        the tenant's stop list), mark it, zero the engine delta."""
-        freq = cached.all_freqs.copy()    # callers may mutate their response
+    def _serve_hit(self, lane: _Lane, master: FCTResponse, req: FCTRequest,
+                   kws: Tuple[int, ...],
+                   coalesced: bool = False) -> FCTResponse:
+        """Re-bind a memoized (or leader) response to the incoming request:
+        slice its ``top_k`` from the full histogram (Def. 6 selection
+        against the tenant's stop list), mark it, zero the engine delta."""
+        freq = master.all_freqs.copy()    # callers may mutate their response
         ids, f = topk_terms(freq, kws, req.top_k, lane.session.stop_mask)
         if lane.session.tokenizer is not None:
             terms = [lane.session.tokenizer.decode(t) for t in ids]
         else:
             terms = [f"<{int(t)}>" for t in ids]
         return dataclasses.replace(
-            cached, terms=terms, term_ids=ids, freqs=f, all_freqs=freq,
+            master, terms=terms, term_ids=ids, freqs=f, all_freqs=freq,
             timings={"plan_ms": 0.0, "execute_ms": 0.0, "total_ms": 0.0},
-            engine_stats={k: 0 for k in cached.engine_stats},
-            cold=False, cache_hit=True, request=req)
+            engine_stats={k: 0 for k in master.engine_stats},
+            cold=False, cache_hit=not coalesced, coalesced=coalesced,
+            request=req)
 
     # -- request path --------------------------------------------------------
 
@@ -160,11 +207,42 @@ class Gateway:
             fut.set_result(self._serve_hit(lane, cached, request, resolved))
             self._count("submitted")
             return fut
-        self._inflight.acquire()          # backpressure: bounded device work
+        # coalesce onto an identical in-flight query: the repeat attaches to
+        # the leader's completion instead of dispatching again, and bypasses
+        # admission (it consumes no engine capacity).  Registering the
+        # leader's key BEFORE it blocks on backpressure below means repeats
+        # of a wedged query pile onto its future rather than onto the
+        # semaphores.  A leader registered before an invalidate() is STALE
+        # (generation mismatch): attaching would serve pre-mutation data,
+        # so the repeat becomes a fresh leader and replaces the entry (the
+        # stale leader still resolves its own followers).
+        entry = _InflightEntry(generation=lane.results.generation)
+        with self._lock:
+            cur = lane.inflight.get(key)
+            if cur is not None and cur.generation == lane.results.generation:
+                fut = Future()
+                cur.followers.append((fut, request, resolved))
+                lane.coalesced += 1
+                self.submitted += 1
+                return fut
+            lane.inflight[key] = entry
+        acquired = []
         try:
+            if lane.sem is not None:
+                lane.sem.acquire()        # per-tenant admission bound
+                acquired.append(lane.sem)
+            self._inflight.acquire()      # backpressure: bounded device work
+            acquired.append(self._inflight)
             inner = lane.batcher.submit(request)
-        except BaseException:
-            self._inflight.release()
+        except BaseException as exc:      # incl. interrupts while blocked
+            for sem in acquired:
+                sem.release()
+            with self._lock:
+                if lane.inflight.get(key) is entry:
+                    del lane.inflight[key]
+                followers = list(entry.followers)
+            for f, _, _ in followers:     # they attached to a dead leader
+                self._resolve(f, exc=exc)
             self._count("rejected")
             raise
         # the caller gets a gateway-owned future resolved AFTER the result
@@ -173,16 +251,20 @@ class Gateway:
         # would let the miss caller mutate the response while (or before)
         # the trailing callback snapshots it for later hits
         outer: Future = Future()
-        gen = lane.results.generation     # fences a racing invalidate()
         inner.add_done_callback(
-            lambda f, lane=lane, key=key, outer=outer, gen=gen:
-                self._relay(lane, key, gen, f, outer))
+            lambda f, lane=lane, key=key, entry=entry, outer=outer:
+                self._relay(lane, key, entry, f, outer))
         self._count("submitted")
         return outer
 
     def _count(self, counter: str) -> None:
         with self._lock:                  # concurrent submitters race else
             setattr(self, counter, getattr(self, counter) + 1)
+
+    def _release(self, lane: _Lane) -> None:
+        self._inflight.release()
+        if lane.sem is not None:
+            lane.sem.release()
 
     @staticmethod
     def _resolve(fut: "Future", result=None, exc=None) -> None:
@@ -196,24 +278,40 @@ class Gateway:
         except Exception:                 # racing cancel()
             pass
 
-    def _relay(self, lane: _Lane, key, gen: int, inner: "Future",
-               outer: "Future") -> None:
-        self._inflight.release()
+    def _relay(self, lane: _Lane, key, entry: _InflightEntry,
+               inner: "Future", outer: "Future") -> None:
+        self._release(lane)
+        with self._lock:
+            # remove only OUR entry: an invalidate may have let a fresh
+            # leader replace a stale one while this query was in flight
+            if lane.inflight.get(key) is entry:
+                del lane.inflight[key]
+            followers = list(entry.followers)  # no attachments after this
         if inner.cancelled():
             outer.cancel()
+            for f, _, _ in followers:
+                f.cancel()
             return
         exc = inner.exception()
         if exc is not None:
             self._resolve(outer, exc=exc)
+            for f, _, _ in followers:     # the shared dispatch failed
+                self._resolve(f, exc=exc)
             return
         resp = inner.result()
         # cache a private master FIRST: the caller owns `resp` once the
         # outer future resolves and may mutate its histogram/stats, which
         # must not poison later hits.  `generation` drops the insert when
         # an invalidate() overtook this query in flight.
-        lane.results.put(key, dataclasses.replace(
+        master = dataclasses.replace(
             resp, all_freqs=resp.all_freqs.copy(),
-            engine_stats=dict(resp.engine_stats)), generation=gen)
+            engine_stats=dict(resp.engine_stats))
+        lane.results.put(key, master, generation=entry.generation)
+        # coalesced followers re-slice their own top_k from the leader's
+        # histogram — each gets a private copy, like a cache hit
+        for f, f_req, f_kws in followers:
+            self._resolve(f, result=self._serve_hit(lane, master, f_req,
+                                                    f_kws, coalesced=True))
         self._resolve(outer, result=resp)
 
     def query(self, schema: str, request: FCTRequest,
@@ -224,14 +322,24 @@ class Gateway:
     # -- cache control -------------------------------------------------------
 
     def invalidate(self, schema: str) -> int:
-        """Drop every memoized result for one tenant (call after mutating
-        its relations); returns the number of entries dropped."""
+        """Data-mutation hook for one tenant: drop every memoized result
+        AND the session's data-derived caches — tuple sets, routing plans
+        and the device-resident relation store — so the next query replans
+        and re-uploads against the mutated relations.  Returns the number
+        of result-cache entries dropped."""
         with self._lock:
             lane = self._lanes.get(schema)
         if lane is None:
             if schema not in self.registry:
                 raise KeyError(f"unknown schema {schema!r}")
-            return 0                       # never served: nothing cached
+            if self.registry.built(schema):  # served elsewhere: still stale
+                self.registry.session(schema).invalidate()
+            return 0                       # never served here: nothing cached
+        # session first, results LAST: the result cache's generation bump
+        # must postdate the session-cache clear, so a query racing through
+        # still-populated session caches registered an OLD generation and
+        # its pre-mutation result is dropped at cache-insert time
+        lane.session.invalidate()
         return lane.results.invalidate()
 
     # -- lifecycle / introspection ------------------------------------------
@@ -241,14 +349,17 @@ class Gateway:
         plus gateway-wide admission counters under ``"gateway"``."""
         with self._lock:
             lanes = dict(self._lanes)
+            coalesced = {n: lane.coalesced for n, lane in lanes.items()}
         out: Dict[str, dict] = {"gateway": {
             "submitted": self.submitted, "rejected": self.rejected,
             "max_inflight": self.config.max_inflight,
+            "max_inflight_per_tenant": self.config.max_inflight_per_tenant,
             "tenants": len(lanes)}}
         for name, lane in lanes.items():
             stats = dict(lane.results.stats())
             stats.update(lane.batcher.stats())
             stats.update(lane.session.stats())
+            stats["coalesced"] = coalesced[name]
             out[name] = stats
         return out
 

@@ -11,9 +11,12 @@ production gateway serves many tenants, each a loaded dataset with its own
     use (thread-safe; concurrent first queries build it once),
   * cache budgets are **partitioned across tenants**: the registry-level
     totals (``total_cache_entries`` executables, ``total_plan_entries``
-    routing plans, ``total_tuple_set_entries`` tuple sets) are split evenly
-    over the tenants registered at session-build time, so one tenant's
-    working set cannot evict another's.  Setting ``total_cache_entries``
+    routing plans, ``total_tuple_set_entries`` tuple sets,
+    ``total_store_bytes`` of device-resident relation columns) are split
+    evenly over the tenants registered at session-build time, so one
+    tenant's working set cannot evict another's.  The store budget bounds
+    DEVICE memory: each tenant's RelationStore keeps its uploaded tuple-set
+    columns LRU within its share and re-uploads on a later miss.  Setting ``total_cache_entries``
     gives every tenant a *private* engine with an LRU-capped executable
     cache (the `SessionConfig.cache_max_entries` mechanism); leaving it
     None shares the process-wide engine across tenants — shared
@@ -66,10 +69,12 @@ class SchemaRegistry:
     def __init__(self, *, total_cache_entries: Optional[int] = None,
                  total_plan_entries: int = 64,
                  total_tuple_set_entries: int = 32,
+                 total_store_bytes: Optional[int] = None,
                  mesh=None) -> None:
         self.total_cache_entries = total_cache_entries
         self.total_plan_entries = total_plan_entries
         self.total_tuple_set_entries = total_tuple_set_entries
+        self.total_store_bytes = total_store_bytes
         self.mesh = mesh
         self._tenants: Dict[str, _Tenant] = {}
         self._lock = threading.Lock()
@@ -112,7 +117,8 @@ class SchemaRegistry:
         return SessionConfig(
             cache_max_entries=share(self.total_cache_entries),
             plan_cache_size=share(self.total_plan_entries, floor=0),
-            tuple_set_cache_size=share(self.total_tuple_set_entries))
+            tuple_set_cache_size=share(self.total_tuple_set_entries),
+            store_max_bytes=share(self.total_store_bytes))
 
     def session(self, name: str) -> FCTSession:
         """The tenant's FCTSession, built (schema generation included) on
@@ -158,6 +164,14 @@ class SchemaRegistry:
             sessions = {n: t.session for n, t in self._tenants.items()
                         if t.session is not None}
         return {name: s.stats() for name, s in sessions.items()}
+
+    def store_bytes(self) -> int:
+        """Device bytes currently resident across every built tenant's
+        relation store (each bounded by its ``total_store_bytes`` share)."""
+        with self._lock:
+            sessions = [t.session for t in self._tenants.values()
+                        if t.session is not None]
+        return sum(s.store.resident_bytes for s in sessions)
 
     def close(self) -> None:
         with self._lock:

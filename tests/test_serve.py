@@ -299,6 +299,133 @@ def test_gateway_backpressure_bounds_inflight():
     gw.close()
 
 
+def test_gateway_coalesces_identical_inflight_queries():
+    # identical (schema, canonical key) queries arriving while the first is
+    # still in flight attach to its Future instead of dispatching again —
+    # even with the result cache OFF (ttl_s=0)
+    gw, reg, kws = _two_tenant_gateway(window_ms=60.0, ttl_s=0)
+    reqs = [FCTRequest(keywords=tuple(kws), r_max=3, top_k=10),
+            FCTRequest(keywords=tuple(reversed(kws)), r_max=3, top_k=10),
+            FCTRequest(keywords=tuple(kws), r_max=3, top_k=3)]  # same key
+    futs = [gw.submit("a", r) for r in reqs]   # all inside one window
+    leader, perm, small = [f.result(timeout=300) for f in futs]
+    assert not leader.coalesced and not leader.cache_hit
+    assert perm.coalesced and small.coalesced  # followers, zero dispatches
+    assert not perm.cache_hit                  # attributed to coalescing
+    np.testing.assert_array_equal(perm.all_freqs, leader.all_freqs)
+    # a follower's top_k is re-sliced from the leader's histogram
+    assert len(small.term_ids) == 3
+    np.testing.assert_array_equal(small.term_ids, leader.term_ids[:3])
+    st = gw.stats()
+    assert st["a"]["coalesced"] == 2
+    assert st["a"]["queries_served"] == 1, "followers dispatched device work"
+    # mutating a follower's histogram must not corrupt the leader's
+    perm.all_freqs[:] = -1
+    np.testing.assert_array_equal(small.all_freqs, leader.all_freqs)
+    gw.close()
+
+
+def test_gateway_coalesced_followers_bypass_admission():
+    # followers consume no engine capacity, so they must not consume
+    # admission slots either: with max_inflight=1, repeats of the wedged
+    # leader still resolve instead of deadlocking
+    gw, reg, kws = _two_tenant_gateway(window_ms=50.0, ttl_s=0,
+                                       max_inflight=1)
+    req = FCTRequest(keywords=tuple(kws), r_max=3)
+    futs = [gw.submit("a", req) for _ in range(3)]
+    got = [f.result(timeout=300) for f in futs]
+    assert [r.coalesced for r in got] == [False, True, True]
+    assert gw.stats()["a"]["coalesced"] == 2
+    gw.close()
+
+
+def test_gateway_per_tenant_admission_bounds():
+    # one tenant's burst saturates ITS bound, not the gateway-wide budget:
+    # the other tenant is admitted immediately
+    schema_a, kws = _crafted_schema(seed=0)
+    schema_b, _ = _crafted_schema(seed=1)
+    reg = SchemaRegistry(total_cache_entries=64)
+    reg.register("a", schema_a)
+    reg.register("b", schema_b)
+    gw = Gateway(reg, GatewayConfig(batch_window_ms=400.0,
+                                    result_cache_ttl_s=0,
+                                    max_inflight=64,
+                                    max_inflight_per_tenant=1))
+    a_futs = []
+    a_state = []
+    done = threading.Event()
+
+    def feeder():
+        # distinct salts: no coalescing — the 2nd submit must block on the
+        # per-tenant semaphore (the gateway-wide budget has room for 64)
+        a_futs.append(gw.submit("a", FCTRequest(keywords=tuple(kws),
+                                                r_max=3, salt=0)))
+        a_state.append("first")
+        a_futs.append(gw.submit("a", FCTRequest(keywords=tuple(kws),
+                                                r_max=3, salt=1)))
+        a_state.append("second")
+        done.set()
+
+    t = threading.Thread(target=feeder, daemon=True)
+    t.start()
+    time.sleep(0.05)  # well inside tenant a's 400ms window
+    assert a_state == ["first"], \
+        "per-tenant bound admitted a second uncached request"
+    # tenant b is not starved by a's backlog
+    rb = gw.query("b", FCTRequest(keywords=tuple(kws), r_max=3),
+                  timeout=300)
+    assert rb.n_cns > 0
+    assert done.wait(timeout=300), "per-tenant backpressure deadlocked"
+    [f.result(timeout=300) for f in a_futs]
+    t.join()
+    gw.close()
+    with pytest.raises(ValueError, match="max_inflight_per_tenant"):
+        GatewayConfig(max_inflight_per_tenant=0)
+
+
+def test_gateway_invalidate_fences_inflight_coalescing():
+    # a leader dispatched BEFORE invalidate() reflects pre-mutation data;
+    # an identical request arriving AFTER the invalidate must not attach to
+    # it — it dispatches fresh (and the stale leader's result is not cached)
+    gw, reg, kws = _two_tenant_gateway(window_ms=150.0, ttl_s=60.0)
+    req = FCTRequest(keywords=tuple(kws), r_max=3)
+    leader = gw.submit("a", req)               # parked in the 150ms window
+    gw.invalidate("a")                         # data "mutated" mid-flight
+    repeat = gw.submit("a", req)
+    r_leader = leader.result(timeout=300)
+    r_repeat = repeat.result(timeout=300)
+    assert not r_repeat.coalesced and not r_repeat.cache_hit, \
+        "post-invalidate request served the stale in-flight leader"
+    assert gw.stats()["a"]["coalesced"] == 0
+    np.testing.assert_array_equal(r_leader.all_freqs, r_repeat.all_freqs)
+    # the pre-invalidation leader's result must not have entered the cache;
+    # the fresh leader's may
+    st = gw.stats()["a"]
+    assert st["result_entries"] == 1
+    gw.close()
+
+
+def test_gateway_invalidate_drops_session_store():
+    gw, reg, kws = _two_tenant_gateway()
+    req = FCTRequest(keywords=tuple(kws), r_max=3)
+    miss = gw.query("a", req)
+    session = reg.session("a")
+    assert len(session.store) > 0, "query never populated the store"
+    assert gw.invalidate("a") == 1
+    assert len(session.store) == 0, \
+        "invalidate left stale device-resident columns"
+    assert session.stats()["tuple_set_entries"] == 0
+    again = gw.query("a", req)   # replans + re-uploads, same answer
+    assert not again.cache_hit and again.engine_stats["store_uploads"] > 0
+    np.testing.assert_array_equal(again.all_freqs, miss.all_freqs)
+    # tenant b's store is untouched by a's invalidation
+    gw.query("b", req)
+    resident = reg.session("b").store.resident_bytes
+    gw.invalidate("a")
+    assert reg.session("b").store.resident_bytes == resident
+    gw.close()
+
+
 def test_gateway_mixed_tenants_concurrent_batches():
     gw, reg, kws = _two_tenant_gateway(window_ms=30.0, ttl_s=0)
     futs = []
