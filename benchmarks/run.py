@@ -1,7 +1,7 @@
 """Benchmark driver — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines (see DESIGN.md §7 for the
-paper-artifact ↔ benchmark mapping).  ``--json [PATH]`` additionally writes
+Prints ``name,us_per_call,derived`` CSV lines (each module's docstring names
+the paper artifact it maps to).  ``--json [PATH]`` additionally writes
 every record (plus warm/cold trace counters from the runtime cache) to a
 machine-readable file (default ``BENCH_fct.json``) so the perf trajectory is
 comparable across PRs.

@@ -1,0 +1,72 @@
+"""Validate BENCH_fct.json so benchmark regressions fail loudly in CI.
+
+Checks that the file parses, that every record is well-formed (``name`` +
+numeric ``us_per_call``), and — unless ``--records-only`` — that the
+cold/warm trace counters the perf trajectory is judged by are present: at
+least one ``kind == "cold"`` record with ``traces >= 1`` (the cold query
+really compiled something) and one ``kind == "warm"`` record with
+``traces == 0`` (the warm query really hit the executable cache).
+
+CI runs the full check against the committed BENCH_fct.json (catching PRs
+that regenerate it without the cold/warm instrumentation) and the
+``--records-only`` check against the freshly generated kernel-micro output
+(which has no cold/warm pairs by design).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def validate(path: str, records_only: bool = False) -> list:
+    errors = []
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError) as exc:
+        return [f"{path}: cannot parse: {exc}"]
+    meta = payload.get("meta")
+    if not isinstance(meta, dict) or "backend" not in meta:
+        errors.append("meta.backend missing")
+    records = payload.get("benchmarks")
+    if not isinstance(records, list) or not records:
+        return errors + ["benchmarks: missing or empty"]
+    for i, rec in enumerate(records):
+        if not isinstance(rec.get("name"), str):
+            errors.append(f"benchmarks[{i}]: no name")
+        if not isinstance(rec.get("us_per_call"), (int, float)):
+            errors.append(f"benchmarks[{i}]: no numeric us_per_call")
+    if not records_only:
+        cold = [r for r in records if r.get("kind") == "cold"]
+        warm = [r for r in records if r.get("kind") == "warm"]
+        if not any(isinstance(r.get("traces"), int) and r["traces"] >= 1
+                   for r in cold):
+            errors.append('no kind="cold" record with traces >= 1 — cold '
+                          'queries no longer report their compilations')
+        if not any(r.get("traces") == 0 for r in warm):
+            errors.append('no kind="warm" record with traces == 0 — warm '
+                          'queries retrace or stopped reporting')
+    return errors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", nargs="?", default="BENCH_fct.json")
+    ap.add_argument("--records-only", action="store_true",
+                    help="skip the cold/warm trace-count requirement "
+                         "(for partial regenerations like kernel_micro)")
+    args = ap.parse_args()
+    errors = validate(args.path, args.records_only)
+    if errors:
+        for e in errors:
+            print(f"BENCH validation: {e}", file=sys.stderr)
+        sys.exit(1)
+    with open(args.path) as f:
+        n = len(json.load(f)["benchmarks"])
+    print(f"{args.path}: OK ({n} records"
+          f"{', records-only' if args.records_only else ''})")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,5 +3,7 @@
 See README.md in this directory for the request lifecycle."""
 from repro.api.request import FCTRequest, FCTResponse
 from repro.api.session import FCTSession, SessionConfig
+from repro.core.accum import AccumPolicy
 
-__all__ = ["FCTRequest", "FCTResponse", "FCTSession", "SessionConfig"]
+__all__ = ["AccumPolicy", "FCTRequest", "FCTResponse", "FCTSession",
+           "SessionConfig"]

@@ -64,6 +64,13 @@ class FCTResponse:
     ``coalesced`` marks responses that attached to an identical in-flight
     query instead of dispatching their own (same zero-engine-cost re-slice,
     but the histogram came from the leader request, not the cache).
+
+    ``accum_policy`` names the device-accumulation precision the histogram
+    carries (:class:`repro.core.accum.AccumPolicy`): ``"int32-checked"`` —
+    exact below 2^31, wrap-around raises instead of answering — or
+    ``"int64-exact"``.  The serving gateway advertises it per tenant, so
+    callers know which contract their totals were computed under; cached
+    and coalesced responses inherit the master response's policy.
     """
 
     terms: List[str]
@@ -81,6 +88,7 @@ class FCTResponse:
     request: Optional[FCTRequest] = None
     cache_hit: bool = False
     coalesced: bool = False
+    accum_policy: str = "int32-checked"
 
     def topk(self) -> List[Tuple[str, int]]:
         """(term, freq) pairs with zero-frequency tail dropped."""

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.api.pipeline import QueryPipeline
 from repro.api.request import FCTRequest, FCTResponse
+from repro.core.accum import AccumPolicy
 from repro.core.candidate_network import (StarCN, TupleSets,
                                           enumerate_star_cns, prune_empty_cns)
 from repro.core.plan import CNPlan, build_cn_plan
@@ -57,6 +58,12 @@ class SessionConfig:
     """Per-session knobs (everything requests should not have to carry)."""
 
     histogram_backend: str = "auto"     # forwarded to the fct_count op
+    accum_policy: str = "auto"          # device accumulation/overflow policy:
+                                        # "auto" (follow jax_enable_x64),
+                                        # "int32" (checked) or "int64" (exact,
+                                        # requires the x64 flag); resolved to
+                                        # an AccumPolicy at session init and
+                                        # advertised on every FCTResponse
     cache_max_entries: Optional[int] = None  # LRU cap for a session-owned engine
     plan_cache_size: int = 32           # LRU cap on cached routing plans per
                                         # request shape (0 disables)
@@ -116,6 +123,9 @@ class FCTSession:
         self.schema = schema
         self.tokenizer = tokenizer
         self.config = config if config is not None else SessionConfig()
+        # resolved once: every dispatch of this session accumulates under
+        # one policy, so the response-level precision advertisement is stable
+        self.accum_policy = AccumPolicy.resolve(self.config.accum_policy)
         if mesh is None:
             from repro.launch.mesh import make_worker_mesh
             mesh = make_worker_mesh()
@@ -303,6 +313,7 @@ class FCTSession:
                      "total_ms": round(plan_ms + execute_ms, 3)},
             engine_stats=engine_stats,
             cold=engine_stats.get("traces", 0) > 0,
+            accum_policy=self.accum_policy.name,
             request=req)
 
     def _dispatch_planned(self, planned: Sequence[_PlannedQuery]) -> _InFlight:
@@ -334,7 +345,8 @@ class FCTSession:
                 # only send tables and key-column indices
                 pending = self.engine.dispatch_plans(
                     all_plans, self.mesh, self.config.histogram_backend,
-                    individual=individual, store=self.store)
+                    individual=individual, store=self.store,
+                    accum=self.accum_policy)
             delta = self._engine_delta(before)
         dispatch_ms = (time.perf_counter() - t0) * 1e3
         return _InFlight(planned=planned, owners=np.asarray(owners, np.int64),
@@ -467,5 +479,6 @@ class FCTSession:
                    tuple_set_misses=self.ts_misses,
                    plan_entries=len(self._plan_cache),
                    plan_hits=self.plan_hits,
-                   plan_misses=self.plan_misses)
+                   plan_misses=self.plan_misses,
+                   accum_policy=self.accum_policy.name)
         return out

@@ -1,0 +1,109 @@
+"""AccumPolicy: the one overflow/precision contract of FCT aggregation.
+
+The paper's second MapReduce job is pure integer counting, so the correctness
+contract of every execution path is arithmetical, not numerical: a term's
+total frequency must come back *exactly*, or the query must fail loudly.
+Before this module each layer enforced its own version of that contract (the
+engine checked int32 wrap, the fct_count op silently rerouted int64 weights,
+the device bodies read ``jax_enable_x64`` ad hoc); now they all consult a
+single :class:`AccumPolicy`:
+
+``INT32_CHECKED``
+    Volumes and histograms accumulate in int32.  Totals past 2^31 wrap to
+    negative on device and are detected on the host, which raises
+    ``OverflowError`` instead of returning silently wrong counts.  The check
+    is best-effort: a double wrap (past 2^32) can land positive again.
+
+``INT64_EXACT``
+    Volumes and histograms accumulate in int64 (requires ``jax_enable_x64``).
+    Totals are exact over the full practically reachable range; no wrap
+    check is needed or performed.
+
+Both policies are served by the same integer-exact device kernels
+(``repro.kernels.fct_count``): device accumulation is exact *modulo* the
+policy width — bit-identical to a host int32/int64 accumulation — so the
+policy fully describes the precision a result carries.  The policy rides the
+runtime's :class:`~repro.runtime.batch.PlanSignature` (so compiled
+executables key on it), is configured per session via
+``SessionConfig.accum_policy`` and advertised per response via
+``FCTResponse.accum_policy`` — the serving gateway reports it per tenant.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class AccumPolicy:
+    """Device accumulation width + overflow behavior for FCT aggregation.
+
+    ``name`` is the wire string advertised through response/gateway stats;
+    ``bits`` the accumulator width (32 or 64); ``check_wrap`` whether host
+    collection must raise ``OverflowError`` on wrapped (negative) totals.
+    Frozen and hashable: it is part of the executable-cache key via
+    ``PlanSignature.accum``.
+    """
+
+    name: str
+    bits: int
+    check_wrap: bool
+
+    @property
+    def dtype(self):
+        """The jnp accumulator dtype (volumes, num-array probes, histograms).
+
+        Read lazily so importing this module never imports jax.
+        """
+        import jax.numpy as jnp
+        return jnp.int64 if self.bits == 64 else jnp.int32
+
+    def check_totals(self, arr) -> None:
+        """Host-side wrap check on collected device totals (numpy array).
+
+        int32 totals past 2^31 wrap to negative — fail loudly.  Best-effort:
+        a total that wraps past 2^32 back to positive is not detected.  For
+        guaranteed-exact large totals use ``INT64_EXACT``
+        (``jax_enable_x64``).
+        """
+        if self.check_wrap and bool((arr < 0).any()):
+            raise OverflowError(
+                "int32 term totals overflowed 2^31 during FCT aggregation; "
+                "re-run with jax_enable_x64=True (JAX_ENABLE_X64=1) for "
+                "int64 device histograms")
+
+    @classmethod
+    def current(cls) -> "AccumPolicy":
+        """The policy implied by the process-wide ``jax_enable_x64`` flag."""
+        import jax
+        return INT64_EXACT if jax.config.jax_enable_x64 else INT32_CHECKED
+
+    @classmethod
+    def resolve(cls, spec: str) -> "AccumPolicy":
+        """Resolve a config spelling: ``"auto"`` (follow ``jax_enable_x64``),
+        ``"int32"`` or ``"int64"`` (explicit; int64 requires the x64 flag,
+        since jax cannot materialize int64 arrays without it)."""
+        if spec == "auto":
+            return cls.current()
+        if spec == "int32":
+            return INT32_CHECKED
+        if spec == "int64":
+            import jax
+            if not jax.config.jax_enable_x64:
+                raise ValueError(
+                    "accum_policy='int64' requires jax_enable_x64 "
+                    "(JAX_ENABLE_X64=1): jax cannot build int64 device "
+                    "arrays without it")
+            return INT64_EXACT
+        raise ValueError(
+            f"accum_policy must be 'auto', 'int32' or 'int64', got {spec!r}")
+
+    @classmethod
+    def for_dtype(cls, dtype) -> "AccumPolicy":
+        """The policy a collected device array was accumulated under —
+        the dtype *is* the policy signal on the collection side."""
+        import numpy as np
+        return INT64_EXACT if np.dtype(dtype) == np.int64 else INT32_CHECKED
+
+
+INT32_CHECKED = AccumPolicy(name="int32-checked", bits=32, check_wrap=True)
+INT64_EXACT = AccumPolicy(name="int64-exact", bits=64, check_wrap=False)

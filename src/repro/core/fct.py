@@ -25,6 +25,7 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core.accum import AccumPolicy
 from repro.core.plan import CNPlan
 from repro.data.schema import StarSchema
 from repro.kernels.fct_count.ops import weighted_histogram
@@ -34,14 +35,15 @@ from repro.kernels.fct_count.ops import weighted_histogram
 # device-side program
 # ---------------------------------------------------------------------------
 
-def _acc_dtype():
+def _acc_dtype(accum: Optional[AccumPolicy] = None):
     """Volume/histogram accumulator dtype (read at trace time).
 
-    int32 by default; int64 when ``jax_enable_x64`` is on, so term totals and
-    intermediate volume products past 2^31 stay exact (the ROADMAP x64 item).
-    All cache keys that memoize traced programs include this flag.
+    The device bodies receive an explicit :class:`AccumPolicy` from the
+    runtime engine (``PlanSignature.accum``); paths without one (the seed
+    per-CN and two-job programs) follow the process-wide ``jax_enable_x64``
+    flag, which every memoizing cache key includes.
     """
-    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    return (accum or AccumPolicy.current()).dtype
 
 
 def _route(text, keys, send):
@@ -82,11 +84,12 @@ def _route_cn(fact, dims):
     return routed_fact, routed_dims
 
 
-def _mr1_volumes(routed_fact, routed_dims, domains: Tuple[int, ...]):
+def _mr1_volumes(routed_fact, routed_dims, domains: Tuple[int, ...],
+                 accum: Optional[AccumPolicy] = None):
     """MR¹ statistics on routed relations: num-arrays (combine + reduce-side
     counting), then fact volume and per-dimension vol contributions
     (Algorithm 3 stage 2).  Returns (vol_fact, dim_vols)."""
-    acc = _acc_dtype()
+    acc = _acc_dtype(accum)
     ftext, fkeys, fmask = routed_fact
     m = len(routed_dims)
     nums = []
@@ -112,11 +115,17 @@ def _mr1_volumes(routed_fact, routed_dims, domains: Tuple[int, ...]):
 
 
 def _device_fct_local(fact, dims, *, domains: Tuple[int, ...], vocab: int,
-                      histogram_backend: str):
+                      histogram_backend: str,
+                      accum: Optional[AccumPolicy] = None):
     """One worker's MR¹+MR² for one CN, WITHOUT the final cross-worker psum
-    (the runtime engine vmaps this over a batch of CNs and psums once)."""
+    (the runtime engine vmaps this over a batch of CNs and psums once).
+
+    ``accum`` pins the volume/histogram dtype (int32-checked or int64-exact);
+    integer weights of either width ride the integer-exact fct_count kernel
+    on the pallas path."""
     routed_fact, routed_dims = _route_cn(fact, dims)
-    vol_fact, dim_vols = _mr1_volumes(routed_fact, routed_dims, domains)
+    vol_fact, dim_vols = _mr1_volumes(routed_fact, routed_dims, domains,
+                                      accum)
     ftext = routed_fact[0]
 
     # --- MR2: weighted histograms + global aggregation ---

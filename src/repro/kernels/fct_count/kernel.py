@@ -1,8 +1,8 @@
-"""Pallas TPU kernel: weighted token histogram via one-hot MXU matmul.
+"""Pallas TPU kernels: weighted token histogram via one-hot MXU matmul.
 
-Hardware adaptation (DESIGN.md §2): the GPU/CPU instinct for a histogram is
-scatter-add; TPUs have no fast vector scatter, but the MXU turns the same
-reduction into a matmul:
+Hardware adaptation (see ``src/repro/kernels/README.md`` for the full
+design): the GPU/CPU instinct for a histogram is scatter-add; TPUs have no
+fast vector scatter, but the MXU turns the same reduction into a matmul:
 
     hist[v0:v0+VB] += wᵀ · one_hot(tokens_block)[·, v0:v0+VB]
 
@@ -10,11 +10,34 @@ Grid = (vocab_blocks, token_blocks); the token axis is the inner (fastest)
 grid dimension, so each vocab tile of the output stays resident in VMEM while
 every token block streams through — one output write per vocab tile.
 
-VMEM working set per step:  NB·L·4 (tokens) + NB·4 (weights) + VB·4 (hist)
-+ NB·L·VB·4 transient one-hot; with NB·L = 1024, VB = 512 that is ~2.2 MB,
-comfortably under the ~16 MB/core budget, and the matmul contraction
-dimension (NB·L = 1024) and output tile (VB = 512) are MXU-aligned
-(multiples of 128).
+Two accumulator schemes share that layout:
+
+``fct_count_pallas`` (float32)
+    The weights ride the matmul directly and accumulate in float32 — exact
+    only for totals < 2^24.  Kept for floating-point weights.
+
+``fct_count_pallas_exact`` (integer, split-limb int32 accumulators)
+    The paper's MR² is pure integer counting, so this is the serving path.
+    Each weight is split OUTSIDE the kernel into ``K`` limbs of
+    ``limb_bits`` bits (``limb_bits`` chosen so a limb's partial matmul over
+    the whole contraction dimension stays < 2^24 and is therefore exact in
+    float32); inside the kernel one ``[K, NB·L] @ [NB·L, VB]`` MXU matmul
+    produces every limb's tile contribution at once, which is cast to int32
+    and added into a ``[K, VB]`` int32 accumulator.  After every step the
+    carries are propagated (``acc[k] >> limb_bits`` into ``acc[k+1]``), so
+    every non-top limb stays < 2^limb_bits and can never wrap; the top limb
+    may wrap, but only in multiples of ``2^(32 + limb_bits·(K-1))`` of the
+    recombined value, which vanish modulo the output width (ops.py picks
+    ``K = ceil(width / limb_bits)``).  The host recombines
+    ``Σ acc[k] << (limb_bits·k)`` in the weights' integer dtype — making
+    device accumulation bit-identical to an int32/int64 host accumulation,
+    wrap-around included.
+
+VMEM working set per step: NB·L·4 (tokens) + NB·K·4 (limbs) + K·VB·4
+(accumulator) + NB·L·VB·4 transient one-hot; with NB·L = 1024, VB = 512,
+K ≤ 6 that is ~2.2 MB, comfortably under the ~16 MB/core budget, and the
+matmul contraction dimension (NB·L = 1024) and output tile (VB = 512) are
+MXU-aligned (multiples of 128).
 """
 from __future__ import annotations
 
@@ -29,6 +52,25 @@ from repro.data.schema import PAD_ID
 DEFAULT_TOKEN_BLOCK = 128   # rows per block (NB)
 DEFAULT_VOCAB_BLOCK = 512   # vocab tile (VB)
 
+# float32 mantissa budget: limb_bits + ceil(log2(contraction)) must stay <= 24
+# so each limb's partial matmul is exact
+_F32_EXACT_BITS = 24
+
+
+def limb_split(contraction: int, acc_bits: int):
+    """(limb_bits, n_limbs) for an exact split-limb accumulation.
+
+    ``limb_bits`` is the widest limb whose partial sum over ``contraction``
+    terms stays float32-exact; ``n_limbs`` covers ``acc_bits`` of weight so
+    the recombined total is exact modulo ``2**acc_bits``.
+    """
+    limb_bits = max(1, _F32_EXACT_BITS - max(0, (contraction - 1).bit_length()))
+    return limb_bits, -(-acc_bits // limb_bits)
+
+
+# ---------------------------------------------------------------------------
+# float32-accumulator kernel (floating-point weights only)
+# ---------------------------------------------------------------------------
 
 def _fct_count_kernel(tokens_ref, weights_ref, hist_ref, *, vocab_block: int):
     nb, l = tokens_ref.shape
@@ -45,9 +87,11 @@ def _fct_count_kernel(tokens_ref, weights_ref, hist_ref, *, vocab_block: int):
     w = jnp.where(tok == PAD_ID, 0.0, w)
     vocab_ids = v0 + jax.lax.broadcasted_iota(jnp.int32, (nb * l, vocab_block), 1)
     onehot = (tok[:, None] == vocab_ids).astype(jnp.float32)
-    # [1, NB*L] @ [NB*L, VB] on the MXU
+    # [1, NB*L] @ [NB*L, VB] on the MXU; HIGHEST forbids the default
+    # bfloat16-pass lowering, which would break the < 2^24 exactness claim
     contrib = jnp.dot(w[None, :], onehot,
-                      preferred_element_type=jnp.float32)[0]
+                      preferred_element_type=jnp.float32,
+                      precision=jax.lax.Precision.HIGHEST)[0]
     hist_ref[...] += contrib
 
 
@@ -57,7 +101,11 @@ def fct_count_pallas(tokens: jnp.ndarray, weights: jnp.ndarray, vocab: int,
                      token_block: int = DEFAULT_TOKEN_BLOCK,
                      vocab_block: int = DEFAULT_VOCAB_BLOCK,
                      interpret: bool = False) -> jnp.ndarray:
-    """tokens [N, L] int32 (N % token_block == 0, vocab % vocab_block == 0)."""
+    """tokens [N, L] int32 (N % token_block == 0, vocab % vocab_block == 0).
+
+    float32 accumulation: exact only for totals < 2^24.  Integer weights
+    should use :func:`fct_count_pallas_exact` (ops.py dispatches).
+    """
     n, l = tokens.shape
     assert n % token_block == 0 and vocab % vocab_block == 0
     grid = (vocab // vocab_block, n // token_block)
@@ -73,3 +121,98 @@ def fct_count_pallas(tokens: jnp.ndarray, weights: jnp.ndarray, vocab: int,
         interpret=interpret,
     )(tokens, weights.astype(jnp.float32))
     return out.at[PAD_ID].set(0.0)
+
+
+# ---------------------------------------------------------------------------
+# integer-exact kernel (split-limb int32 accumulators)
+# ---------------------------------------------------------------------------
+
+def _fct_count_exact_kernel(tokens_ref, limbs_ref, acc_ref, *,
+                            vocab_block: int, limb_bits: int):
+    nb, l = tokens_ref.shape
+    n_limbs = limbs_ref.shape[1]
+    v0 = pl.program_id(0) * vocab_block
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    tok = tokens_ref[...].reshape(nb * l)
+    valid = (tok != PAD_ID).astype(jnp.float32)
+    vocab_ids = v0 + jax.lax.broadcasted_iota(jnp.int32, (nb * l, vocab_block), 1)
+    onehot = (tok[:, None] == vocab_ids).astype(jnp.float32)
+    # limbs [NB, K] -> [K, NB*L] (broadcast-reshape per row, PAD masked);
+    # each row holds one limb of every token's weight, all < 2^limb_bits
+    limbs = limbs_ref[...].astype(jnp.float32).T
+    limbs = jnp.broadcast_to(limbs[:, :, None], (n_limbs, nb, l))
+    limbs = limbs.reshape(n_limbs, nb * l) * valid[None, :]
+    # [K, NB*L] @ [NB*L, VB] on the MXU: every limb's tile contribution in
+    # one matmul; each partial sum < 2^limb_bits * NB*L <= 2^24, so the
+    # float32 result is an exact integer and the int32 cast is lossless.
+    # HIGHEST is load-bearing: the default TPU matmul runs bfloat16 passes,
+    # whose 8-bit mantissa cannot even represent a limb value
+    contrib = jnp.dot(limbs, onehot, preferred_element_type=jnp.float32,
+                      precision=jax.lax.Precision.HIGHEST)
+    acc = [acc_ref[k, :] + contrib[k].astype(jnp.int32)
+           for k in range(n_limbs)]
+    # carry propagation on every step keeps each non-top limb < 2^limb_bits
+    # (so it can never wrap int32); only the top limb may wrap, harmlessly
+    # modulo the recombined output width (see module docstring)
+    for k in range(n_limbs - 1):
+        carry = acc[k] >> limb_bits
+        acc[k] = acc[k] - (carry << limb_bits)
+        acc[k + 1] = acc[k + 1] + carry
+    acc_ref[...] = jnp.stack(acc)
+
+
+@functools.partial(jax.jit, static_argnames=("vocab", "token_block",
+                                             "vocab_block", "interpret"))
+def fct_count_pallas_exact(tokens: jnp.ndarray, weights: jnp.ndarray,
+                           vocab: int,
+                           token_block: int = DEFAULT_TOKEN_BLOCK,
+                           vocab_block: int = DEFAULT_VOCAB_BLOCK,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Integer-exact weighted histogram; tokens [N, L] int32, weights [N] int.
+
+    Returns totals in the weights' dtype, bit-identical to the ref path's
+    host-style accumulation (exact modulo 2^32 for int32 weights, modulo
+    2^64 for int64) — including wrap-around, so the engine's int32 overflow
+    check sees exactly what a plain int32 accumulation would have produced.
+    """
+    n, l = tokens.shape
+    assert n % token_block == 0 and vocab % vocab_block == 0
+    assert jnp.issubdtype(weights.dtype, jnp.integer), weights.dtype
+    # exactness is modulo the weight dtype's full width (int16/uint64/...
+    # included): the limb count must cover it and the recombination shifts
+    # must stop at it
+    acc_bits = jnp.iinfo(weights.dtype).bits
+    limb_bits, n_limbs = limb_split(token_block * l, acc_bits)
+    mask = (1 << limb_bits) - 1
+    # split outside the kernel: limb k holds bits [limb_bits*k, limb_bits*(k+1))
+    # of each weight's two's-complement pattern (arithmetic >> sign-extends,
+    # which keeps the mod-2^acc_bits recombination exact for negatives too)
+    limbs = jnp.stack([(weights >> (limb_bits * k)) & mask
+                       for k in range(n_limbs)], axis=1).astype(jnp.int32)
+    grid = (vocab // vocab_block, n // token_block)
+    acc = pl.pallas_call(
+        functools.partial(_fct_count_exact_kernel, vocab_block=vocab_block,
+                          limb_bits=limb_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((token_block, l), lambda i, j: (j, 0)),
+            pl.BlockSpec((token_block, n_limbs), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_limbs, vocab_block), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n_limbs, vocab), jnp.int32),
+        interpret=interpret,
+    )(tokens, limbs)
+    # host-side recombination in the output dtype: limbs whose shift reaches
+    # the dtype width contribute 0 modulo 2^width and are dropped (shifting
+    # by >= the bit width is undefined); in-range shifts wrap as two's
+    # complement, matching an integer ref accumulation bit for bit
+    out = jnp.zeros((vocab,), weights.dtype)
+    for k in range(n_limbs):
+        shift = limb_bits * k
+        if shift < acc_bits:
+            out = out + (acc[k].astype(weights.dtype) << shift)
+    return out.at[PAD_ID].set(0)

@@ -1,6 +1,7 @@
 """Pallas TPU kernel for the RG-LRU diagonal recurrence.
 
-Hardware adaptation (DESIGN.md §2): GPU implementations (and the Griffin
+Hardware adaptation (see ``src/repro/kernels/README.md``): GPU
+implementations (and the Griffin
 paper's TPU note) favour parallel prefix scans; on TPU the VPU is wide
 enough that the right layout is *sequential in time, vector-parallel in
 channels*: grid (B, channel_blocks, seq_blocks) with the carry h [wb] held

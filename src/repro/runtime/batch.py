@@ -16,15 +16,23 @@ Padding is semantics-free by construction:
 
 ``stack_group`` then stacks same-signature plans along a leading CN axis
 [N, P, ...]; the engine vmaps the per-CN device program over that axis.
+
+Beside the shape lattice, a signature carries the query's
+:class:`~repro.core.accum.AccumPolicy` — the device accumulation width and
+overflow behavior.  Two plans with equal shapes but different policies lower
+to different XLA programs (int32 vs int64 accumulators), so the policy must
+be part of the signature for the executable cache and batching to stay
+sound.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
+from repro.core.accum import AccumPolicy, INT32_CHECKED, INT64_EXACT
 from repro.core.plan import CNPlan, RelationRoute
 from repro.data.schema import PAD_ID
 
@@ -66,12 +74,18 @@ class RelationSig:
 class PlanSignature:
     """Shape-bucket signature of a CNPlan — the executable-cache key's
     structural part.  Two plans with equal signatures lower to the same XLA
-    program and may be stacked into one batched dispatch."""
+    program and may be stacked into one batched dispatch.
+
+    ``accum`` is the device accumulation policy (int32-checked vs
+    int64-exact): it changes the dtype of every volume/histogram in the
+    program body, so it is as much a part of the program's identity as the
+    shapes are."""
 
     n_devices: int
     vocab: int
     fact: RelationSig
     dims: Tuple[RelationSig, ...]
+    accum: AccumPolicy = INT32_CHECKED
 
     @property
     def m(self) -> int:
@@ -91,13 +105,18 @@ def _route_sig(route: RelationRoute, domain: int, bucket: bool,
                        key_width=key_width)
 
 
-def plan_signature(plan: CNPlan, bucket: bool = True) -> PlanSignature:
+def plan_signature(plan: CNPlan, bucket: bool = True,
+                   accum: Optional[AccumPolicy] = None) -> PlanSignature:
+    """``accum=None`` follows the process-wide ``jax_enable_x64`` flag
+    (``AccumPolicy.current()``); sessions pass their resolved policy."""
+    if accum is None:
+        accum = AccumPolicy.current()
     dims = tuple(_route_sig(plan.dims[i], plan.key_domains[i], bucket)
                  for i in plan.included)
     fact = _route_sig(plan.fact, 0, bucket,
                       key_width=plan.fact.ref.key_width)
     return PlanSignature(n_devices=plan.n_devices, vocab=plan.vocab_size,
-                         fact=fact, dims=dims)
+                         fact=fact, dims=dims, accum=accum)
 
 
 def _pad_route(route: RelationRoute, sig: RelationSig) -> Dict[str, np.ndarray]:
@@ -121,21 +140,23 @@ def pad_plan_arrays(plan: CNPlan, sig: PlanSignature):
     return fact, dims
 
 
-def group_plan_indices(plans: Sequence[CNPlan], bucket: bool = True
+def group_plan_indices(plans: Sequence[CNPlan], bucket: bool = True,
+                       accum: Optional[AccumPolicy] = None
                        ) -> List[Tuple[PlanSignature, List[int]]]:
     """Group plan *indices* by signature (insertion order preserved): one
     batched device program per group."""
     groups: Dict[PlanSignature, List[int]] = {}
     for i, plan in enumerate(plans):
-        groups.setdefault(plan_signature(plan, bucket), []).append(i)
+        groups.setdefault(plan_signature(plan, bucket, accum), []).append(i)
     return list(groups.items())
 
 
-def group_plans(plans: Sequence[CNPlan], bucket: bool = True
+def group_plans(plans: Sequence[CNPlan], bucket: bool = True,
+                accum: Optional[AccumPolicy] = None
                 ) -> List[Tuple[PlanSignature, List[CNPlan]]]:
     """As ``group_plan_indices``, materialized to the plans themselves."""
     return [(sig, [plans[i] for i in idxs])
-            for sig, idxs in group_plan_indices(plans, bucket)]
+            for sig, idxs in group_plan_indices(plans, bucket, accum)]
 
 
 def stack_group(plans: Sequence[CNPlan], sig: PlanSignature):

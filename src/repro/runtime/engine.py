@@ -29,15 +29,17 @@ attributed back to their query — the multi-query path of the session API.
 
 Integer histograms make the batched sum exactly associative: the engine's
 ``all_freqs`` is bit-identical to the sequential per-CN path as long as every
-term's group total fits the histogram dtype.  The accumulator is int32 by
-default; with ``jax_enable_x64`` the device programs accumulate volumes and
-histograms in int64 (see core/fct._acc_dtype; int64 weights force the
-fct_count op onto its integer-exact ref path, since the Pallas kernel's
-float32 accumulator is exact only to 2^24).  On the int32 path the engine
-checks each device result for wrap-around (negative totals) and raises
-OverflowError instead of returning silently wrong counts — a best-effort
-check: a total that wraps past 2^32 back to positive, or float32 rounding on
-the TPU kernel path between 2^24 and 2^31, is not detected.
+term's group total fits the histogram dtype.  Precision is governed by one
+:class:`~repro.core.accum.AccumPolicy`, carried on the group's
+``PlanSignature`` (so executables key on it): under ``INT32_CHECKED`` the
+device programs — cross-CN group sum and psum included — accumulate in
+int32 and the host collection raises OverflowError on wrap-around (negative
+totals, a best-effort check: a total wrapping past 2^32 back to positive is
+not detected); under ``INT64_EXACT`` (``jax_enable_x64``) everything
+accumulates in int64.  Both widths ride the integer-exact fct_count kernel
+on the pallas path (split-limb int32-pair accumulation, bit-identical to a
+host integer accumulation — the float32-rounding caveat of the old kernel
+is retired along with the forced int64 ref fallback).
 """
 from __future__ import annotations
 
@@ -50,6 +52,7 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core.accum import AccumPolicy
 from repro.core.plan import CNPlan
 from repro.runtime.batch import (PlanSignature, group_plan_indices,
                                  pad_cn_axis, plan_signature, stack_group,
@@ -60,35 +63,29 @@ from repro.runtime.cache import ExecutableCache, default_cache
 CN_BUCKET_MIN = 4  # floor for bucketing the per-CN-output programs' N axis
 
 
-def _check_int32_totals(arr: np.ndarray) -> None:
-    """int32 device totals past 2^31 wrap to negative — fail loudly.
-
-    Best-effort: a double wrap (past 2^32) can land positive again, and the
-    TPU kernel's float32 path rounds before the cast (see fct_count/ops.py).
-    For guaranteed-exact large totals enable ``jax_enable_x64``.
-    """
-    if arr.dtype == np.int32 and bool((arr < 0).any()):
-        raise OverflowError(
-            "int32 term totals overflowed 2^31 during FCT aggregation; "
-            "re-run with jax_enable_x64=True (JAX_ENABLE_X64=1) for int64 "
-            "device histograms")
-
-
 def _vmapped_cns(fact, dims, sig: PlanSignature, histogram_backend: str,
                  reduce_cns: bool):
     """Per-device body shared by both program families: vmap the one-CN
-    MR¹+MR² over the leading CN axis, then one psum over the worker axis."""
+    MR¹+MR² over the leading CN axis, then one psum over the worker axis.
+
+    The cross-CN group sum and the psum accumulate in the signature's
+    AccumPolicy dtype — explicitly, so individually-fine int32 CNs summing
+    past 2^31 wrap (and are caught on collection) under INT32_CHECKED and
+    stay exact under INT64_EXACT, instead of depending on whatever dtype
+    the per-CN histograms happened to carry."""
     from repro.core.fct import _device_fct_local
     domains = tuple(d.domain for d in sig.dims)
 
     def one_cn(f, ds):
         return _device_fct_local(f, ds, domains=domains, vocab=sig.vocab,
-                                 histogram_backend=histogram_backend)
+                                 histogram_backend=histogram_backend,
+                                 accum=sig.accum)
 
     hists = jax.vmap(one_cn)(fact, dims)            # [N, vocab]
+    acc = sig.accum.dtype
     if reduce_cns:
-        return lax.psum(jnp.sum(hists, axis=0), "w")  # one psum per group
-    return lax.psum(hists, "w")                     # per-CN, one psum
+        return lax.psum(jnp.sum(hists, axis=0, dtype=acc), "w")
+    return lax.psum(hists.astype(acc), "w")         # per-CN, one psum
 
 
 def _build_batched_fn(sig: PlanSignature, mesh: Mesh, histogram_backend: str,
@@ -173,13 +170,14 @@ class FCTEngine:
         self.bytes_shipped = 0
         self.column_bytes_shipped = 0
 
-    def _group(self, plans: Sequence[CNPlan]
+    def _group(self, plans: Sequence[CNPlan],
+               accum: Optional[AccumPolicy] = None
                ) -> List[Tuple[PlanSignature, List[int]]]:
         """Signature groups as plan indices; singletons when unbatched."""
         if not self.batch:
-            return [(plan_signature(p, self.bucket), [i])
+            return [(plan_signature(p, self.bucket, accum), [i])
                     for i, p in enumerate(plans)]
-        return group_plan_indices(plans, self.bucket)
+        return group_plan_indices(plans, self.bucket, accum)
 
     def _dispatch(self, sig: PlanSignature, group: Sequence[CNPlan],
                   mesh: Mesh, histogram_backend: str, reduce_cns: bool,
@@ -240,12 +238,16 @@ class FCTEngine:
     @staticmethod
     def _collect(lazy) -> np.ndarray:
         raw = np.asarray(lazy)
-        _check_int32_totals(raw)
+        # the dtype IS the policy on the collection side: int32 results were
+        # accumulated under INT32_CHECKED, whose contract is to fail loudly
+        # on wrap-around instead of returning silently wrong counts
+        AccumPolicy.for_dtype(raw.dtype).check_totals(raw)
         return raw.astype(np.int64)
 
     def dispatch_plans(self, plans: Sequence[CNPlan], mesh: Mesh,
                        histogram_backend: str = "auto",
-                       individual: bool = False, store=None):
+                       individual: bool = False, store=None,
+                       accum: Optional[AccumPolicy] = None):
         """Async half of a run: enqueue every signature group and return a
         pending handle ``[(plan_indices, lazy_result), ...]``.
 
@@ -260,6 +262,11 @@ class FCTEngine:
         program families, AND batch compositions (content-addressed, unlike
         the retired PR 3 stack cache, which was limited to deterministic
         single-query groups).
+
+        ``accum`` pins the AccumPolicy (int32-checked / int64-exact) the
+        device programs accumulate under; ``None`` follows the process-wide
+        ``jax_enable_x64`` flag.  The policy rides each group's signature,
+        so executables compiled under different policies never alias.
         """
         if not plans:
             raise ValueError("dispatch_plans needs at least one plan")
@@ -267,7 +274,7 @@ class FCTEngine:
                                       histogram_backend,
                                       reduce_cns=not individual,
                                       store=store))
-                for sig, idxs in self._group(plans)]
+                for sig, idxs in self._group(plans, accum)]
 
     def collect_total(self, pending, vocab: int) -> np.ndarray:
         """Block on an ``individual=False`` handle: total freq[vocab]."""
@@ -285,15 +292,18 @@ class FCTEngine:
         return out
 
     def run_plans(self, plans: Sequence[CNPlan], mesh: Mesh,
-                  histogram_backend: str = "auto", store=None) -> np.ndarray:
+                  histogram_backend: str = "auto", store=None,
+                  accum: Optional[AccumPolicy] = None) -> np.ndarray:
         """Total freq[vocab] (int64) over all joined-CN plans."""
         pending = self.dispatch_plans(plans, mesh, histogram_backend,
-                                      store=store)
+                                      store=store, accum=accum)
         return self.collect_total(pending, plans[0].vocab_size)
 
     def run_plans_individual(self, plans: Sequence[CNPlan], mesh: Mesh,
                              histogram_backend: str = "auto",
-                             store=None) -> np.ndarray:
+                             store=None,
+                             accum: Optional[AccumPolicy] = None
+                             ) -> np.ndarray:
         """Per-plan freq[len(plans), vocab] (int64).
 
         Plans from different queries may share one device dispatch (same
@@ -301,7 +311,8 @@ class FCTEngine:
         caller attribute each histogram to its owning query.
         """
         pending = self.dispatch_plans(plans, mesh, histogram_backend,
-                                      individual=True, store=store)
+                                      individual=True, store=store,
+                                      accum=accum)
         return self.collect_individual(pending, len(plans),
                                        plans[0].vocab_size)
 

@@ -1,10 +1,10 @@
 """Multi-tenant FCT serving gateway: schema registry, time-windowed dynamic
 batching and TTL result caching over `repro/api` sessions.  See README.md
 in this directory for the architecture."""
-from repro.serve.batcher import DynamicBatcher
+from repro.serve.batcher import DynamicBatcher, FlushPool
 from repro.serve.gateway import Gateway, GatewayConfig
 from repro.serve.registry import SchemaRegistry
 from repro.serve.result_cache import ResultCache
 
-__all__ = ["DynamicBatcher", "Gateway", "GatewayConfig", "SchemaRegistry",
-           "ResultCache"]
+__all__ = ["DynamicBatcher", "FlushPool", "Gateway", "GatewayConfig",
+           "SchemaRegistry", "ResultCache"]

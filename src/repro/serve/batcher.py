@@ -15,35 +15,92 @@ The trade is explicit: up to ``window_ms`` of added latency per query buys
 fewer device round-trips per query — the paper's batch-amortization argument
 (n-gram statistics serving) applied to the online workload.
 
-One flusher thread per batcher.  The window opens when a request lands in an
-empty queue and closes ``window_ms`` later; everything collected in between
-is one ``query_batch`` call.  ``window_ms=0`` degenerates to
-flush-as-fast-as-possible (whatever accumulated while the previous flush
-ran forms the next batch — still > 1 under load).  Errors during a flush
-land on every future of that window (request *validation* errors are caught
-earlier, at gateway submit time).
+One *collector* thread per batcher opens and closes windows.  The window
+opens when a request lands in an empty queue and closes ``window_ms`` later;
+everything collected in between is one ``query_batch`` call.
+``window_ms=0`` degenerates to flush-as-fast-as-possible (whatever
+accumulated while the previous flush ran forms the next batch — still > 1
+under load).  Errors during a flush land on every future of that window
+(request *validation* errors are caught earlier, at gateway submit time).
+
+Where the flush RUNS is pluggable: standalone, the collector flushes inline
+(one tenant, nothing to contend with); under the gateway, every tenant's
+batcher shares one :class:`FlushPool` — a small executor that runs windows
+of *different tenants* in parallel (the last ROADMAP serving-hardening
+item).  Inline, tenant B's window waits while tenant A's flush blocks on
+its device transfer; pooled, the collector hands the window off and
+immediately reopens, so one slow tenant cannot convoy the others.  The pool
+counts concurrently-running flushes (``flush_peak_inflight``) so load tests
+can assert the cross-tenant parallelism actually happened.
 """
 from __future__ import annotations
 
 import threading
 import time
-from concurrent.futures import Future
-from typing import List, Tuple
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import List, Optional, Tuple
 
 from repro.api.request import FCTRequest
 from repro.api.session import FCTSession
+
+
+class FlushPool:
+    """Shared flush executor + cross-tenant flush-concurrency telemetry.
+
+    ``submit`` runs a window flush on one of ``max_workers`` threads and
+    tracks how many flushes are running concurrently; the peak is the
+    metric that proves (or disproves) cross-tenant flush parallelism.
+    One pool serves all tenants of a gateway; ``shutdown`` drains it.
+    """
+
+    def __init__(self, max_workers: int = 4) -> None:
+        if max_workers < 1:
+            raise ValueError(f"max_workers must be >= 1, got {max_workers}")
+        self.max_workers = max_workers
+        self._ex = ThreadPoolExecutor(max_workers=max_workers,
+                                      thread_name_prefix="fct-flush")
+        self._lock = threading.Lock()
+        self.flushes = 0
+        self.inflight = 0
+        self.peak_inflight = 0
+
+    def submit(self, flush) -> Future:
+        def run():
+            with self._lock:
+                self.flushes += 1
+                self.inflight += 1
+                self.peak_inflight = max(self.peak_inflight, self.inflight)
+            try:
+                flush()
+            finally:
+                with self._lock:
+                    self.inflight -= 1
+
+        return self._ex.submit(run)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"flush_workers": self.max_workers,
+                    "flushes": self.flushes,
+                    "flush_inflight": self.inflight,
+                    "flush_peak_inflight": self.peak_inflight}
+
+    def shutdown(self) -> None:
+        self._ex.shutdown(wait=True)
 
 
 class DynamicBatcher:
     """Collect requests for ``window_ms``; flush through ``query_batch``."""
 
     def __init__(self, session: FCTSession, window_ms: float = 1.0,
-                 name: str = "") -> None:
+                 name: str = "", pool: Optional[FlushPool] = None) -> None:
         if window_ms < 0:
             raise ValueError(f"window_ms must be >= 0, got {window_ms}")
         self.session = session
         self.window_ms = window_ms
         self.name = name
+        self._pool = pool
+        self._outstanding: List[Future] = []   # pooled flushes not yet done
         self._pending: List[Tuple[FCTRequest, Future]] = []
         self._cv = threading.Condition()
         self._closed = False
@@ -83,7 +140,19 @@ class DynamicBatcher:
                 batch, self._pending = self._pending, []
                 closed = self._closed
             if batch:
-                self._flush(batch)
+                if self._pool is not None:
+                    # hand the window to the shared pool and reopen
+                    # immediately: windows of different tenants (and, under
+                    # backlog, consecutive windows of this one — the
+                    # session's query_batch is thread-safe) flush in parallel
+                    fut = self._pool.submit(
+                        lambda batch=batch: self._flush(batch))
+                    with self._cv:
+                        self._outstanding.append(fut)
+                        self._outstanding = [f for f in self._outstanding
+                                             if not f.done()]
+                else:
+                    self._flush(batch)
             if closed:
                 return
 
@@ -123,10 +192,16 @@ class DynamicBatcher:
                 if windows else 0.0}
 
     def close(self) -> None:
-        """Flush whatever is pending, then stop the flusher (idempotent)."""
+        """Flush whatever is pending, then stop the collector — and, with a
+        pool, wait for every handed-off window to finish (idempotent)."""
         with self._cv:
             if self._closed:
                 return
             self._closed = True
             self._cv.notify()
         self._thread.join()
+        # safe to read after the join: the collector thread appended every
+        # pooled flush before exiting, and no new windows can open
+        for fut in self._outstanding:
+            fut.result()
+        self._outstanding = []

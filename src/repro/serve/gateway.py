@@ -47,7 +47,7 @@ from typing import Dict, List, Optional, Tuple
 from repro.api.request import FCTRequest, FCTResponse
 from repro.api.session import FCTSession
 from repro.core.star import topk_terms
-from repro.serve.batcher import DynamicBatcher
+from repro.serve.batcher import DynamicBatcher, FlushPool
 from repro.serve.registry import SchemaRegistry
 from repro.serve.result_cache import ResultCache
 
@@ -63,6 +63,10 @@ class GatewayConfig:
     max_inflight: int = 64              # gateway-wide uncached in-flight cap
     max_inflight_per_tenant: Optional[int] = None  # per-tenant admission
                                         # bound (None = gateway-wide only)
+    flush_workers: int = 4              # shared FlushPool size: windows of
+                                        # different tenants flush in parallel
+                                        # on these threads (0 = legacy inline
+                                        # flushing on each tenant's collector)
 
     def __post_init__(self) -> None:
         # fail at construction, not inside the first submit()'s lazy lane
@@ -86,6 +90,9 @@ class GatewayConfig:
             raise ValueError(
                 f"result_cache_entries must be >= 1, got "
                 f"{self.result_cache_entries}")
+        if self.flush_workers < 0:
+            raise ValueError(
+                f"flush_workers must be >= 0, got {self.flush_workers}")
 
 
 @dataclasses.dataclass
@@ -128,6 +135,11 @@ class Gateway:
         self._lanes: Dict[str, _Lane] = {}
         self._lock = threading.Lock()
         self._inflight = threading.Semaphore(self.config.max_inflight)
+        # one flush pool for ALL tenants: windows of different tenants run
+        # their query_batch in parallel instead of convoying behind one
+        # slow tenant's device transfer (None = legacy inline flushing)
+        self._flush_pool = (FlushPool(self.config.flush_workers)
+                            if self.config.flush_workers else None)
         self._closed = False
         self.submitted = 0
         self.rejected = 0
@@ -150,7 +162,7 @@ class Gateway:
                     session=session,
                     batcher=DynamicBatcher(
                         session, window_ms=self.config.batch_window_ms,
-                        name=schema),
+                        name=schema, pool=self._flush_pool),
                     results=ResultCache(
                         max_entries=self.config.result_cache_entries,
                         ttl_s=self.config.result_cache_ttl_s),
@@ -345,8 +357,10 @@ class Gateway:
     # -- lifecycle / introspection ------------------------------------------
 
     def stats(self) -> Dict[str, dict]:
-        """Per-tenant result-cache + batch-occupancy + session counters,
-        plus gateway-wide admission counters under ``"gateway"``."""
+        """Per-tenant result-cache + batch-occupancy + session counters
+        (including the tenant's advertised ``accum_policy``), plus
+        gateway-wide admission and flush-concurrency counters under
+        ``"gateway"``."""
         with self._lock:
             lanes = dict(self._lanes)
             coalesced = {n: lane.coalesced for n, lane in lanes.items()}
@@ -355,10 +369,12 @@ class Gateway:
             "max_inflight": self.config.max_inflight,
             "max_inflight_per_tenant": self.config.max_inflight_per_tenant,
             "tenants": len(lanes)}}
+        if self._flush_pool is not None:
+            out["gateway"].update(self._flush_pool.stats())
         for name, lane in lanes.items():
             stats = dict(lane.results.stats())
             stats.update(lane.batcher.stats())
-            stats.update(lane.session.stats())
+            stats.update(lane.session.stats())   # carries accum_policy
             stats["coalesced"] = coalesced[name]
             out[name] = stats
         return out
@@ -374,6 +390,8 @@ class Gateway:
             lanes = dict(self._lanes)
         for lane in lanes.values():
             lane.batcher.close()
+        if self._flush_pool is not None:
+            self._flush_pool.shutdown()
 
     def __enter__(self) -> "Gateway":
         return self

@@ -347,6 +347,26 @@ def test_x64_device_totals_are_exact():
         jax.config.update("jax_enable_x64", prev)
 
 
+def test_accum_policy_resolution_and_advertisement():
+    import jax
+    from repro.api import AccumPolicy
+    schema, kws, _ = _overflow_schema(n=16)
+    # "auto" resolves against the process flag and is advertised end to end
+    session = FCTSession(schema)
+    assert session.accum_policy is AccumPolicy.current()
+    resp = session.query(FCTRequest(keywords=kws, r_max=2, top_k=3))
+    assert resp.accum_policy == AccumPolicy.current().name
+    assert session.stats()["accum_policy"] == AccumPolicy.current().name
+    # explicit int32 is always available; explicit int64 needs the x64 flag
+    s32 = FCTSession(schema, config=SessionConfig(accum_policy="int32"))
+    assert s32.accum_policy.name == "int32-checked"
+    if not jax.config.jax_enable_x64:
+        with pytest.raises(ValueError, match="jax_enable_x64"):
+            FCTSession(schema, config=SessionConfig(accum_policy="int64"))
+    with pytest.raises(ValueError, match="accum_policy"):
+        FCTSession(schema, config=SessionConfig(accum_policy="int128"))
+
+
 def test_request_validation():
     with pytest.raises(ValueError, match="keyword"):
         FCTRequest(keywords=())

@@ -180,3 +180,63 @@ def test_bucketing_policy():
     # ...and grouping keys on the signature
     groups = group_plans([p1, p1, p1])
     assert len(groups) == 1 and len(groups[0][1]) == 3
+
+
+def test_signature_carries_accum_policy():
+    from repro.core.accum import INT32_CHECKED, INT64_EXACT, AccumPolicy
+    s1, kws = _crafted_schema(seed=0)
+    p1 = _largest_plan(s1, kws)
+    sig32 = plan_signature(p1, accum=INT32_CHECKED)
+    assert sig32.accum is INT32_CHECKED
+    assert plan_signature(p1) == plan_signature(
+        p1, accum=AccumPolicy.current())
+    # programs compiled under different policies must never alias
+    assert sig32 != plan_signature(p1, accum=INT64_EXACT)
+
+
+def test_x64_session_kernel_path_matches_seed_two_jobs():
+    """The retired ROADMAP "x64 Pallas path" item, end to end: an x64 query
+    through the session -> engine STORE path, with the histogram computed by
+    the Pallas kernel body (interpret mode), must be bit-identical to the
+    seed two-job per-CN path — with ZERO fct_count ref-path fallbacks."""
+    import jax
+    if not jax.config.jax_enable_x64:
+        pytest.skip("x64 engine path needs JAX_ENABLE_X64=1 (CI x64 job)")
+    from repro.api import FCTRequest, FCTSession, SessionConfig
+    from repro.kernels.fct_count import ops
+    from repro.runtime.cache import ExecutableCache
+
+    schema, kws = _dataset("star")
+    mesh = make_worker_mesh()
+    # seed two-job path (fresh cache), kernel body for MR2 as well
+    ts = TupleSets.build(schema, kws)
+    cns = prune_empty_cns(enumerate_star_cns(len(kws), schema.m, 3), ts)
+    seed_freq = np.zeros((schema.vocab_size,), np.int64)
+    for cn in cns:
+        plan = build_cn_plan(schema, ts, cn, mesh.devices.size)
+        if plan is None:
+            fact_idx, dim_idx = ts.cn_rows(cn)
+            if fact_idx is not None:
+                text = schema.fact.text[fact_idx]
+            else:
+                (i, rows), = dim_idx.items()
+                text = schema.dims[i].text[rows]
+            seed_freq += tokens_histogram(
+                text, np.ones(text.shape[0], np.int64), schema.vocab_size)
+        else:
+            seed_freq += run_cn_plan_two_jobs(
+                plan, mesh, histogram_backend="interpret",
+                cache=ExecutableCache())
+    seed_freq[PAD_ID] = 0
+
+    session = FCTSession(
+        schema, mesh=mesh, engine=FCTEngine(cache=ExecutableCache()),
+        config=SessionConfig(histogram_backend="interpret"))
+    ops.reset_path_counts()
+    resp = session.query(FCTRequest(keywords=kws, r_max=3))
+    assert ops.PATH_COUNTS["ref"] == 0, "x64 query fell back to the ref path"
+    assert ops.PATH_COUNTS["pallas_exact"] > 0
+    assert resp.accum_policy == "int64-exact"
+    assert resp.engine_stats["store_uploads"] > 0  # really the store path
+    np.testing.assert_array_equal(resp.all_freqs, seed_freq)
+    np.testing.assert_array_equal(resp.all_freqs, fct_star(schema, kws, 3))

@@ -5,11 +5,16 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")  # optional dev dependency
 from hypothesis import given, settings, strategies as st
 
+import jax
+import jax.numpy as jnp
+
 from repro.core.candidate_network import TupleSets, enumerate_star_cns, prune_empty_cns
 from repro.core.fct import run_fct_query
 from repro.core.shares import closed_form_shares, optimize_shares, replication_cost
 from repro.core.star import fct_bruteforce, fct_star
-from repro.data.schema import JoinEdge, Relation, StarSchema
+from repro.data.schema import JoinEdge, Relation, StarSchema, tokens_histogram
+from repro.kernels.fct_count import ref as fct_ref
+from repro.kernels.fct_count.ops import weighted_histogram
 
 SETTINGS = dict(max_examples=20, deadline=None)
 
@@ -102,6 +107,42 @@ def test_paper_closed_form_example():
     s = closed_form_shares([2000, 1000, 500], 64)
     assert s[0] > s[1] > s[2]
     np.testing.assert_allclose(s[0] / s[1], 2.0, rtol=1e-9)
+
+
+@settings(**SETTINGS)
+@given(st.data())
+def test_weighted_histogram_exact_across_precision_boundaries(data):
+    """kernel (interpret) == ref == seed numpy oracle, with weights drawn
+    around the 2^24 float-exactness and 2^31 int32 boundaries.
+
+    Runs in whichever accumulation mode the process is in: int32 weights
+    always; int64 weights (magnitudes past 2^31) additionally under the CI
+    x64 job.  Totals are kept below the weight dtype's wrap point so the
+    int64-accumulating seed oracle is comparable; wrap parity itself is
+    covered in test_kernels.py.
+    """
+    x64 = bool(jax.config.jax_enable_x64)
+    n = data.draw(st.integers(1, 64))
+    l = data.draw(st.integers(1, 6))
+    vocab = data.draw(st.sampled_from([33, 64, 100, 512]))
+    # magnitudes straddling each boundary; caps keep Σ w·l·n < 2^31 / 2^63
+    if x64 and data.draw(st.booleans()):
+        wdtype, hi = jnp.int64, (1 << 52) // (n * l)
+    else:
+        wdtype, hi = jnp.int32, (1 << 30) // (n * l)
+    boundary = data.draw(st.sampled_from(
+        [0, 1, (1 << 24) - 1, 1 << 24, (1 << 24) + 1, hi]))
+    rng = np.random.default_rng(data.draw(st.integers(0, 10_000)))
+    toks = jnp.asarray(rng.integers(1, vocab, (n, l)), jnp.int32)
+    w = np.minimum(rng.integers(0, max(boundary, 2), (n,)), hi)
+    w = jnp.asarray(w).astype(wdtype)
+    r = np.asarray(fct_ref.weighted_histogram(toks, w, vocab))
+    k = np.asarray(weighted_histogram(toks, w, vocab, backend="pallas",
+                                      interpret=True))
+    np.testing.assert_array_equal(r, k)
+    np.testing.assert_array_equal(
+        tokens_histogram(np.asarray(toks), np.asarray(w), vocab),
+        k.astype(np.int64))
 
 
 @settings(**SETTINGS)

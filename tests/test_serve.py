@@ -8,7 +8,7 @@ import pytest
 
 from repro.api import FCTRequest, FCTSession, SessionConfig
 from repro.data.tpch import TpchConfig
-from repro.serve import (DynamicBatcher, Gateway, GatewayConfig,
+from repro.serve import (DynamicBatcher, FlushPool, Gateway, GatewayConfig,
                          SchemaRegistry, ResultCache)
 
 from test_engine import _crafted_schema
@@ -180,6 +180,81 @@ def test_batcher_zero_window_and_close_flushes_pending():
     assert fut2.done() and fut2.result().n_cns >= 0
     with pytest.raises(ValueError, match="window_ms"):
         DynamicBatcher(session, window_ms=-1)
+
+
+def test_flush_pool_runs_tenants_in_parallel_and_counts_peak():
+    """Two tenants' windows must flush CONCURRENTLY on the shared pool: each
+    flush blocks on a barrier that only releases when both are running, so a
+    serialized pool would deadlock (barrier timeout -> error on the
+    futures)."""
+    schema_a, kws = _crafted_schema(seed=0)
+    schema_b, _ = _crafted_schema(seed=1)
+    reg = SchemaRegistry()
+    reg.register("a", schema_a)
+    reg.register("b", schema_b)
+    gw = Gateway(reg, GatewayConfig(batch_window_ms=5.0, result_cache_ttl_s=0,
+                                    flush_workers=2))
+    barrier = threading.Barrier(2, timeout=60)
+    for name in ("a", "b"):
+        session = reg.session(name)
+        inner = session.query_batch
+
+        def synced(reqs, _inner=inner):
+            barrier.wait()              # both tenants' flushes inside
+            return _inner(reqs)
+
+        session.query_batch = synced
+    fa = gw.submit("a", FCTRequest(keywords=tuple(kws), r_max=3))
+    fb = gw.submit("b", FCTRequest(keywords=tuple(kws), r_max=3))
+    assert fa.result(timeout=300).n_cns > 0
+    assert fb.result(timeout=300).n_cns > 0
+    st = gw.stats()["gateway"]
+    assert st["flush_workers"] == 2 and st["flushes"] == 2
+    assert st["flush_peak_inflight"] >= 2, st
+    gw.close()
+    assert gw.stats()["gateway"]["flush_inflight"] == 0
+
+
+def test_batcher_close_waits_for_pooled_flushes():
+    schema, kws = _crafted_schema(seed=0)
+    session = FCTSession(schema)
+    pool = FlushPool(max_workers=2)
+    release = threading.Event()
+    inner = session.query_batch
+
+    def gated(reqs):
+        release.wait(timeout=60)
+        return inner(reqs)
+
+    session.query_batch = gated
+    batcher = DynamicBatcher(session, window_ms=0.0, pool=pool)
+    fut = batcher.submit(FCTRequest(keywords=tuple(kws), r_max=3))
+    closer = threading.Thread(target=batcher.close)
+    closer.start()
+    time.sleep(0.05)
+    assert not fut.done()               # close() is blocked on the flush
+    release.set()
+    closer.join(timeout=60)
+    assert not closer.is_alive()
+    assert fut.result(timeout=60).n_cns > 0   # flushed, not dropped
+    pool.shutdown()
+    with pytest.raises(ValueError, match="max_workers"):
+        FlushPool(max_workers=0)
+
+
+def test_gateway_advertises_accum_policy_per_tenant():
+    from repro.core.accum import AccumPolicy
+    schema_a, kws = _crafted_schema(seed=0)
+    reg = SchemaRegistry()
+    reg.register("a", schema_a)
+    gw = Gateway(reg)
+    resp = gw.query("a", FCTRequest(keywords=tuple(kws), r_max=3))
+    assert resp.accum_policy == AccumPolicy.current().name
+    assert gw.stats()["a"]["accum_policy"] == AccumPolicy.current().name
+    # cached repeats inherit the master's advertised precision
+    hit = gw.query("a", FCTRequest(keywords=tuple(kws), r_max=3))
+    assert hit.cache_hit and hit.accum_policy == resp.accum_policy
+    gw.close()
 
 
 # -- Gateway -----------------------------------------------------------------
