@@ -24,8 +24,19 @@ RECORDS: list = []  # every emit() lands here; run.py --json serializes them
 
 
 def emit(name: str, us: float, derived: str = "", **extra) -> None:
+    """Record one measurement.  Every record carries the device mesh it was
+    measured on (``n_devices`` + ``mesh`` axis sizes) — meshes vary per
+    record now (the device_scaling driver emits results from subprocesses
+    with forced device counts), so meta-level n_devices is not enough.
+    Callers measuring under a different mesh than this process's ambient
+    devices pass ``n_devices=``/``mesh=`` explicitly."""
     print(f"{name},{us:.1f},{derived}")
     rec = {"name": name, "us_per_call": round(us, 1), "derived": derived}
+    if "n_devices" not in extra or "mesh" not in extra:
+        import jax
+        n = len(jax.devices())
+        extra.setdefault("n_devices", n)
+        extra.setdefault("mesh", {"w": n})
     rec.update(extra)
     RECORDS.append(rec)
 

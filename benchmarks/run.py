@@ -29,9 +29,9 @@ def main() -> None:
                     metavar="PATH", help="write results as JSON")
     args = ap.parse_args()
 
-    from benchmarks import (common, kernel_micro, multi_query, response_time,
-                            serving_load, shares_comm, shuffle_size,
-                            skew_adjust)
+    from benchmarks import (common, device_scaling, kernel_micro, multi_query,
+                            response_time, serving_load, shares_comm,
+                            shuffle_size, skew_adjust)
     mods = {
         "response_time": response_time,
         "multi_query": multi_query,
@@ -40,6 +40,10 @@ def main() -> None:
         "skew_adjust": skew_adjust,
         "shares_comm": shares_comm,
         "kernel_micro": kernel_micro,
+        # subprocess fan-out over forced device counts; also runnable
+        # standalone (`python benchmarks/device_scaling.py`) with merge-in
+        # --json semantics and a --quick CI mode
+        "device_scaling": device_scaling,
     }
     if args.benchmark is not None and args.benchmark not in mods:
         ap.error(f"unknown benchmark {args.benchmark!r} "

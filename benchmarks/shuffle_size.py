@@ -17,7 +17,7 @@ def dataset_bytes(schema) -> int:
     return total
 
 
-def _dominant_plan(schema, kws):
+def _dominant_plan(schema, kws, n_devices: int = 1, mode: str = "uniform"):
     from repro.core.candidate_network import (TupleSets, enumerate_star_cns,
                                               prune_empty_cns)
     from repro.core.plan import build_cn_plan
@@ -30,7 +30,7 @@ def _dominant_plan(schema, kws):
             continue
         if len(fact_idx) > sz:
             best, sz = cn, len(fact_idx)
-    return build_cn_plan(schema, ts, best, 1)
+    return build_cn_plan(schema, ts, best, n_devices, mode=mode)
 
 
 def run():
@@ -46,3 +46,23 @@ def run():
                  float(res.shuffle_bytes),
                  f"dominant_cn_fraction={frac:.3f} "
                  f"all_{res.n_joined_cns}_cns_fraction={total:.3f}")
+            # post-split view at P=8: how much of the dominant CN's rows land
+            # on the worst device before (uniform grid) vs after the balance
+            # pass splits it (adaptive over-decomposition + LPT).  Planning
+            # only — no devices involved, so P can exceed len(jax.devices()).
+            before = _dominant_plan(schema, kws, n_devices=8)
+            after = _dominant_plan(schema, kws, n_devices=8, mode="adaptive")
+            rows = max(int(before.device_rows.sum()), 1)
+            emit(f"fct_shuffle/{qtype}/scale{scale}/dominant_split_p8",
+                 float(after.shuffle_bytes),
+                 f"max_device_row_share before={before.device_rows.max()/rows:.3f} "
+                 f"after={after.device_rows.max()/rows:.3f} "
+                 f"row_imbalance before={before.row_imbalance:.3f} "
+                 f"after={after.row_imbalance:.3f} rho={after.rho}",
+                 dominant_cn_fraction_before=round(
+                     float(before.device_rows.max()) / rows, 4),
+                 dominant_cn_fraction_after=round(
+                     float(after.device_rows.max()) / rows, 4),
+                 row_imbalance_before=round(before.row_imbalance, 4),
+                 row_imbalance_after=round(after.row_imbalance, 4),
+                 rho=after.rho)

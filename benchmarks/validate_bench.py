@@ -1,11 +1,15 @@
 """Validate BENCH_fct.json so benchmark regressions fail loudly in CI.
 
 Checks that the file parses, that every record is well-formed (``name`` +
-numeric ``us_per_call``), and — unless ``--records-only`` — that the
-cold/warm trace counters the perf trajectory is judged by are present: at
-least one ``kind == "cold"`` record with ``traces >= 1`` (the cold query
-really compiled something) and one ``kind == "warm"`` record with
-``traces == 0`` (the warm query really hit the executable cache).
+numeric ``us_per_call`` + the device mesh it was measured on: ``n_devices``
+int >= 1 and a ``mesh`` axis-size dict — meshes vary per record since the
+device_scaling driver landed, so a number without its mesh is meaningless),
+and — unless ``--records-only`` — that the cold/warm trace counters the
+perf trajectory is judged by are present: at least one ``kind == "cold"``
+record with ``traces >= 1`` (the cold query really compiled something), one
+``kind == "warm"`` record with ``traces == 0`` (the warm query really hit
+the executable cache), and at least one record measured on more than one
+device (the scale-out curves exist).
 
 CI runs the full check against the committed BENCH_fct.json (catching PRs
 that regenerate it without the cold/warm instrumentation) and the
@@ -37,6 +41,13 @@ def validate(path: str, records_only: bool = False) -> list:
             errors.append(f"benchmarks[{i}]: no name")
         if not isinstance(rec.get("us_per_call"), (int, float)):
             errors.append(f"benchmarks[{i}]: no numeric us_per_call")
+        n_dev = rec.get("n_devices")
+        if not (isinstance(n_dev, int) and n_dev >= 1):
+            errors.append(f"benchmarks[{i}] ({rec.get('name')}): n_devices "
+                          "missing or not an int >= 1")
+        if not isinstance(rec.get("mesh"), dict):
+            errors.append(f"benchmarks[{i}] ({rec.get('name')}): mesh axis "
+                          "sizes missing")
     if not records_only:
         cold = [r for r in records if r.get("kind") == "cold"]
         warm = [r for r in records if r.get("kind") == "warm"]
@@ -47,6 +58,10 @@ def validate(path: str, records_only: bool = False) -> list:
         if not any(r.get("traces") == 0 for r in warm):
             errors.append('no kind="warm" record with traces == 0 — warm '
                           'queries retrace or stopped reporting')
+        if not any(isinstance(r.get("n_devices"), int) and r["n_devices"] > 1
+                   for r in records):
+            errors.append("no record measured on n_devices > 1 — the "
+                          "device_scaling curves are missing")
     return errors
 
 

@@ -14,7 +14,7 @@ import numpy as np
 
 Keyword = Union[str, int]
 
-_MODES = ("uniform", "skew", "round_robin")
+_MODES = ("uniform", "skew", "round_robin", "adaptive")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,6 +24,10 @@ class FCTRequest:
     ``keywords`` accepts term ids (ints) or raw strings (resolved through the
     session's tokenizer); a mix is allowed.  ``mode``/``rho``/``sample_frac``/
     ``salt`` are the skew-scheduler knobs forwarded to ``build_cn_plan``.
+    ``mode="adaptive"`` ignores the fixed ``rho`` and lets the balance pass
+    pick the over-decomposition per CN from the observed tuple-set sizes
+    (sessions with ``SessionConfig(adaptive_rho=True)`` plan default
+    ``"uniform"`` requests this way automatically).
     """
 
     keywords: Tuple[Keyword, ...]
@@ -89,6 +93,10 @@ class FCTResponse:
     cache_hit: bool = False
     coalesced: bool = False
     accum_policy: str = "int32-checked"
+    row_imbalance: float = 1.0   # dominant CN's ACHIEVED per-device fact-row
+    #                              imbalance (max/mean; the balance pass's
+    #                              target metric — ``imbalance`` above is over
+    #                              LPT's estimated task costs)
 
     def topk(self) -> List[Tuple[str, int]]:
         """(term, freq) pairs with zero-frequency tail dropped."""

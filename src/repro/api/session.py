@@ -58,6 +58,14 @@ class SessionConfig:
     """Per-session knobs (everything requests should not have to carry)."""
 
     histogram_backend: str = "auto"     # forwarded to the fct_count op
+    adaptive_rho: bool = False          # balance pass: plan default
+                                        # ("uniform") requests with
+                                        # mode="adaptive" — per-CN rho from
+                                        # the observed tuple-set sizes,
+                                        # LPT-scheduled (multi-device meshes;
+                                        # a no-op on 1 device).  Explicit
+                                        # "skew"/"round_robin"/"adaptive"
+                                        # requests are honored either way
     accum_policy: str = "auto"          # device accumulation/overflow policy:
                                         # "auto" (follow jax_enable_x64),
                                         # "int32" (checked) or "int64" (exact,
@@ -87,6 +95,7 @@ class _PlannedQuery:
     shuffle_rows: int
     shuffle_bytes: int
     imbalance: float
+    row_imbalance: float
     plan_ms: float
 
 
@@ -251,10 +260,16 @@ class FCTSession:
         host_freq = np.zeros((self.schema.vocab_size,), np.int64)
         plans: List[CNPlan] = []
         shuffle_rows = shuffle_bytes = 0
-        imbalance, dominant_cost = 1.0, -1.0
+        imbalance, row_imb, dominant_cost = 1.0, 1.0, -1.0
+        # the session-level balance pass upgrades default requests: per-CN
+        # adaptive rho + LPT instead of the uniform hash grid (explicit
+        # skew/round_robin/adaptive requests are forwarded untouched)
+        mode = req.mode
+        if mode == "uniform" and self.config.adaptive_rho:
+            mode = "adaptive"
         for cn in cns:
             plan = build_cn_plan(self.schema, ts, cn, self._n_dev,
-                                 mode=req.mode, rho=req.rho,
+                                 mode=mode, rho=req.rho,
                                  sample_frac=req.sample_frac, salt=req.salt)
             if plan is None:
                 # single-relation CN: a map-only word-count (no shuffle)
@@ -275,12 +290,14 @@ class FCTSession:
             total = float(plan.schedule.device_cost.sum())
             if total > dominant_cost:
                 dominant_cost, imbalance = total, plan.schedule.imbalance
+                row_imb = plan.row_imbalance
         plan_ms = (time.perf_counter() - t0) * 1e3
         return _PlannedQuery(request=req, keywords=kws, plans=plans,
                              host_freq=host_freq, n_cns=len(cns),
                              shuffle_rows=shuffle_rows,
                              shuffle_bytes=shuffle_bytes,
-                             imbalance=imbalance, plan_ms=plan_ms)
+                             imbalance=imbalance, row_imbalance=row_imb,
+                             plan_ms=plan_ms)
 
     def _engine_snapshot(self) -> Dict[str, int]:
         st = dict(self.engine.stats())
@@ -308,6 +325,7 @@ class FCTSession:
             shuffle_rows=planned.shuffle_rows,
             shuffle_bytes=planned.shuffle_bytes,
             imbalance=planned.imbalance,
+            row_imbalance=planned.row_imbalance,
             timings={"plan_ms": round(plan_ms, 3),
                      "execute_ms": round(execute_ms, 3),
                      "total_ms": round(plan_ms + execute_ms, 3)},
@@ -480,5 +498,9 @@ class FCTSession:
                    plan_entries=len(self._plan_cache),
                    plan_hits=self.plan_hits,
                    plan_misses=self.plan_misses,
-                   accum_policy=self.accum_policy.name)
+                   accum_policy=self.accum_policy.name,
+                   n_devices=self._n_dev,
+                   mesh_shape={a: int(self.mesh.shape[a])
+                               for a in self.mesh.axis_names},
+                   adaptive_rho=self.config.adaptive_rho)
         return out

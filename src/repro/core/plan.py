@@ -33,8 +33,9 @@ import numpy as np
 from repro.core.candidate_network import StarCN, TupleSets
 from repro.core.hypercube import TaskGrid, over_decompose
 from repro.core.shares import optimize_shares
-from repro.core.skew import (Schedule, estimate_task_costs, lpt_schedule,
-                             round_robin_schedule)
+from repro.core.skew import (Schedule, choose_rho, estimate_task_costs,
+                             lpt_schedule, round_robin_schedule,
+                             row_imbalance)
 from repro.data.schema import PAD_ID, StarSchema
 
 
@@ -179,10 +180,22 @@ class CNPlan:
     vocab_size: int
     shuffle_rows: int           # fact + replicated dim rows actually sent
     shuffle_bytes: int          # int32 payload bytes (keys + text)
+    rho: int = 1                # effective over-decomposition factor used
+    device_rows: Optional[np.ndarray] = None  # int64 [P] routed fact rows
 
     @property
     def n_devices(self) -> int:
         return int(self.fact.ref.n_devices)
+
+    @property
+    def row_imbalance(self) -> float:
+        """ACHIEVED per-device fact-row imbalance (max/mean; 1.0 = perfect).
+
+        This is the balance the devices actually see, as opposed to
+        ``schedule.imbalance`` which is over LPT's *estimated* task costs."""
+        if self.device_rows is None:
+            return 1.0
+        return row_imbalance(self.device_rows)
 
 
 def _send_table(pairs_src: np.ndarray, pairs_dst: np.ndarray,
@@ -206,7 +219,17 @@ def build_cn_plan(schema: StarSchema, ts: TupleSets, cn: StarCN,
                   n_devices: int, mode: str = "uniform", rho: int = 4,
                   sample_frac: float = 1.0, salt: int = 0,
                   shares: Optional[Tuple[int, ...]] = None) -> Optional[CNPlan]:
-    """Routing plan for a joined star CN.  Returns None for 1-relation CNs."""
+    """Routing plan for a joined star CN.  Returns None for 1-relation CNs.
+
+    ``mode="adaptive"`` is the balance pass: instead of the caller's fixed
+    ``rho``, the over-decomposition factor is chosen per CN from the
+    OBSERVED tuple-set sizes (:func:`repro.core.skew.choose_rho`) and the
+    shares are re-optimized for the full ``rho * P`` task grid — so the
+    dominant CN's rows are split across devices at a granularity the data
+    itself justifies, and tiny CNs skip over-decomposition (and its extra
+    dimension replication) entirely.  Tasks are then LPT-scheduled as in
+    ``"skew"`` mode.
+    """
     P = n_devices
     fact_idx, dim_idx = ts.cn_rows(cn)
     if fact_idx is None or len(dim_idx) == 0:
@@ -215,10 +238,23 @@ def build_cn_plan(schema: StarSchema, ts: TupleSets, cn: StarCN,
     m = len(inc)
 
     # --- shares (§4.1): optimizer over the CN's tuple-set sizes ---
-    if shares is None:
-        sizes = [max(1, len(dim_idx[i])) for i in inc]
-        shares = optimize_shares(sizes, P, fact_size=len(fact_idx)).shares
-    grid_shares = shares if mode == "uniform" else over_decompose(shares, rho)
+    rho_eff = 1 if mode == "uniform" else rho
+    sizes = [max(1, len(dim_idx[i])) for i in inc]
+    if mode == "adaptive":
+        rho_eff = choose_rho(len(fact_idx), P)
+        if shares is None:
+            # re-optimize shares for the FULL task grid (T = rho * P) rather
+            # than over-decomposing a P-share solution: the divisor lattice
+            # of T is richer, so the grid tracks the size ratios closer
+            grid_shares = optimize_shares(sizes, P * rho_eff,
+                                          fact_size=len(fact_idx)).shares
+        else:
+            grid_shares = over_decompose(shares, rho_eff)
+    else:
+        if shares is None:
+            shares = optimize_shares(sizes, P, fact_size=len(fact_idx)).shares
+        grid_shares = shares if mode == "uniform" else over_decompose(shares,
+                                                                      rho)
     grid = TaskGrid(grid_shares)
     T = grid.n_tasks
 
@@ -249,7 +285,7 @@ def build_cn_plan(schema: StarSchema, ts: TupleSets, cn: StarCN,
         cost = estimate_task_costs(grid, fact_tasks, probes,
                                    [dim_buckets[i] for i in inc],
                                    sample_frac=sample_frac, seed=salt)
-        if mode == "skew":
+        if mode in ("skew", "adaptive"):
             schedule = lpt_schedule(cost, P, prune_empty=empty)
         elif mode == "round_robin":
             schedule = round_robin_schedule(cost, P)
@@ -314,8 +350,10 @@ def build_cn_plan(schema: StarSchema, ts: TupleSets, cn: StarCN,
         shuffle_rows += sent_d
         shuffle_bytes += sent_d * 4 * (dim_ref.text_len + 1)
 
+    device_rows = np.bincount(fact_dst[keep], minlength=P).astype(np.int64)
     return CNPlan(cn=cn, included=inc, shares=grid_shares, schedule=schedule,
                   fact=fact_route, dims=dims,
                   key_domains={i: schema.key_domain(i) for i in inc},
                   vocab_size=schema.vocab_size,
-                  shuffle_rows=shuffle_rows, shuffle_bytes=shuffle_bytes)
+                  shuffle_rows=shuffle_rows, shuffle_bytes=shuffle_bytes,
+                  rho=rho_eff, device_rows=device_rows)

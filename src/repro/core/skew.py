@@ -70,6 +70,47 @@ def estimate_task_costs(grid: TaskGrid,
     return fact_count + dim_count + join_est
 
 
+def choose_rho(fact_rows: int, n_devices: int, *,
+               target_tasks_per_device: int = 8,
+               min_rows_per_task: int = 8,
+               max_rho: int = 64) -> int:
+    """Per-query over-decomposition factor from OBSERVED tuple-set sizes.
+
+    The fixed ``rho=4`` config point treats every CN alike; the balance pass
+    instead doubles the task grid until either (a) LPT has
+    ``target_tasks_per_device`` tasks per worker to pack with — enough
+    freedom that one hot hash bucket no longer pins a whole device — or
+    (b) tasks would drop below ``min_rows_per_task`` expected fact rows,
+    where further splitting only buys scheduling overhead and extra
+    dimension replication (the Afrati–Ullman communication cost grows with
+    the task count).  Power of two by construction; 1 on a single device
+    (nothing to balance) and for tiny tuple sets.
+    """
+    if n_devices <= 1:
+        return 1
+    rho = 1
+    while (rho < target_tasks_per_device and rho * 2 <= max_rho
+           and fact_rows >= min_rows_per_task * n_devices * rho * 2):
+        rho *= 2
+    return rho
+
+
+def device_row_counts(task_to_device: np.ndarray, fact_tasks: np.ndarray,
+                      n_devices: int) -> np.ndarray:
+    """Fact rows landing on each device under a schedule — the *achieved*
+    balance (row imbalance = max/mean of this), as opposed to the estimated
+    cost balance LPT optimized.  Rows of pruned tasks (-1) are dropped."""
+    dst = task_to_device[fact_tasks]
+    return np.bincount(dst[dst >= 0], minlength=n_devices).astype(np.int64)
+
+
+def row_imbalance(device_rows: np.ndarray) -> float:
+    """max/mean rows per device; 1.0 is perfect balance, ``n_devices``
+    means one device carries everything."""
+    mean = device_rows.mean()
+    return float(device_rows.max() / max(mean, 1e-12))
+
+
 def lpt_schedule(task_cost: np.ndarray, n_devices: int,
                  prune_empty: np.ndarray | None = None) -> Schedule:
     """Greedy LPT packing of tasks onto devices (paper Fig. 2)."""

@@ -7,8 +7,12 @@ planning:
   2. group same-signature CNs and stack them along a leading CN axis,
   3. run ONE shard_map program per group — the per-CN device body is vmapped
      over the CN axis, the [N, vocab] histograms are summed on device and
-     cross-worker aggregation is a single psum — so a query costs one device
-     dispatch and one host transfer per signature, not per CN,
+     cross-worker aggregation is a single collective: a vocab-sharded
+     reduce-scatter on multi-device meshes (each device owns its vocab/P
+     bin shard — half the all-reduce's traffic and no replicated result;
+     the host gather reads each shard exactly once) with a psum fallback on
+     one device — so a query costs one device dispatch and one host
+     transfer per signature, not per CN,
   4. memoize the jitted executables in an ExecutableCache keyed by
      (signature, N, histogram backend, mesh), so warm queries never retrace,
   5. with a session's RelationStore (store.py), gather the tuple-set
@@ -63,16 +67,33 @@ from repro.runtime.cache import ExecutableCache, default_cache
 CN_BUCKET_MIN = 4  # floor for bucketing the per-CN-output programs' N axis
 
 
-def _vmapped_cns(fact, dims, sig: PlanSignature, histogram_backend: str,
-                 reduce_cns: bool):
-    """Per-device body shared by both program families: vmap the one-CN
-    MR¹+MR² over the leading CN axis, then one psum over the worker axis.
+def vocab_padded(vocab: int, n_devices: int) -> int:
+    """Vocab rounded up so each device owns an equal ``vocab/P`` bin shard
+    under reduce-scatter aggregation.  The pad bins are structurally zero
+    (the histogram never writes past ``vocab``), so slicing them off on the
+    host is exact."""
+    return -(-vocab // n_devices) * n_devices
 
-    The cross-CN group sum and the psum accumulate in the signature's
+
+def _vmapped_cns(fact, dims, sig: PlanSignature, histogram_backend: str,
+                 reduce_cns: bool, reduce_scatter: bool):
+    """Per-device body shared by both program families: vmap the one-CN
+    MR¹+MR² over the leading CN axis, then ONE cross-worker collective.
+
+    The cross-CN group sum and the collective accumulate in the signature's
     AccumPolicy dtype — explicitly, so individually-fine int32 CNs summing
     past 2^31 wrap (and are caught on collection) under INT32_CHECKED and
     stay exact under INT64_EXACT, instead of depending on whatever dtype
-    the per-CN histograms happened to carry."""
+    the per-CN histograms happened to carry.
+
+    ``reduce_scatter=True`` replaces the full-vocab ``psum`` (an all-reduce:
+    every device ends up holding all ``vocab`` bins, ~2·(P-1)/P·vocab moved
+    per device plus a replicated result) with ``lax.psum_scatter`` over a
+    vocab axis padded to a multiple of P: each device owns only its
+    ``vocab/P`` bin shard — half the collective traffic, no broadcast of
+    bins nobody reads, and the host gather touches each shard exactly once.
+    Integer addition is associative, so both collectives produce
+    bit-identical totals under either AccumPolicy."""
     from repro.core.fct import _device_fct_local
     domains = tuple(d.domain for d in sig.dims)
 
@@ -83,18 +104,43 @@ def _vmapped_cns(fact, dims, sig: PlanSignature, histogram_backend: str,
 
     hists = jax.vmap(one_cn)(fact, dims)            # [N, vocab]
     acc = sig.accum.dtype
+    pad = vocab_padded(sig.vocab, sig.n_devices) - sig.vocab
     if reduce_cns:
-        return lax.psum(jnp.sum(hists, axis=0, dtype=acc), "w")
-    return lax.psum(hists.astype(acc), "w")         # per-CN, one psum
+        total = jnp.sum(hists, axis=0, dtype=acc)
+        if not reduce_scatter:
+            return lax.psum(total, "w")
+        if pad:
+            total = jnp.pad(total, (0, pad))
+        return lax.psum_scatter(total, "w", scatter_dimension=0, tiled=True)
+    hists = hists.astype(acc)                       # per-CN, one collective
+    if not reduce_scatter:
+        return lax.psum(hists, "w")
+    if pad:
+        hists = jnp.pad(hists, ((0, 0), (0, pad)))
+    return lax.psum_scatter(hists, "w", scatter_dimension=1, tiled=True)
+
+
+def _out_spec(reduce_cns: bool, reduce_scatter: bool):
+    """Output layout of a program family: replicated under psum, vocab-
+    sharded over the worker axis under reduce-scatter (each device owns its
+    ``vocab/P`` bin shard; the host-side gather then reads each shard from
+    exactly one device)."""
+    if not reduce_scatter:
+        return P()
+    return P("w") if reduce_cns else P(None, "w")
 
 
 def _build_batched_fn(sig: PlanSignature, mesh: Mesh, histogram_backend: str,
-                      reduce_cns: bool = True):
+                      reduce_cns: bool = True, reduce_scatter: bool = False):
     """shard_map program over host-stacked [N, P, ...] relations.
 
     ``reduce_cns=True``  -> freq[vocab]     (CN axis summed on device)
     ``reduce_cns=False`` -> freq[N, vocab]  (per-CN totals, for callers that
     attribute CNs of one batch to different queries)
+
+    Under ``reduce_scatter`` the vocab axis is padded to a multiple of P and
+    sharded ``P("w")`` on the output instead of replicated (see
+    ``_vmapped_cns``); collection slices the pad bins off.
     """
     shard = P(None, "w")
     spec = {"text": shard, "keys": shard, "send": shard}
@@ -102,14 +148,17 @@ def _build_batched_fn(sig: PlanSignature, mesh: Mesh, histogram_backend: str,
     def device_fn(fact, dims):
         fact = {k: jnp.squeeze(v, 1) for k, v in fact.items()}
         dims = [{k: jnp.squeeze(v, 1) for k, v in d.items()} for d in dims]
-        return _vmapped_cns(fact, dims, sig, histogram_backend, reduce_cns)
+        return _vmapped_cns(fact, dims, sig, histogram_backend, reduce_cns,
+                            reduce_scatter)
 
     return shard_map(device_fn, mesh=mesh, in_specs=(spec, [spec] * sig.m),
-                     out_specs=P(), check_rep=False)
+                     out_specs=_out_spec(reduce_cns, reduce_scatter),
+                     check_rep=False)
 
 
 def _build_store_fn(sig: PlanSignature, mesh: Mesh, histogram_backend: str,
-                    n_stack: int, reduce_cns: bool = True):
+                    n_stack: int, reduce_cns: bool = True,
+                    reduce_scatter: bool = False):
     """shard_map program whose relation columns are STORE-RESIDENT.
 
     Inputs per relation are ``n_stack`` separate device arrays (one per CN
@@ -139,11 +188,12 @@ def _build_store_fn(sig: PlanSignature, mesh: Mesh, histogram_backend: str,
             return out
 
         return _vmapped_cns(stack(fact), [stack(d) for d in dims], sig,
-                            histogram_backend, reduce_cns)
+                            histogram_backend, reduce_cns, reduce_scatter)
 
     return shard_map(device_fn, mesh=mesh,
                      in_specs=(fact_spec, [rel_spec] * sig.m),
-                     out_specs=P(), check_rep=False)
+                     out_specs=_out_spec(reduce_cns, reduce_scatter),
+                     check_rep=False)
 
 
 class FCTEngine:
@@ -158,13 +208,23 @@ class FCTEngine:
     ``column_bytes_shipped`` is the text/keys portion of that — zero on the
     store path, where columns are device-resident (store uploads are
     accounted by the RelationStore itself).
+
+    ``reduce_scatter=True`` (default) aggregates histograms with a vocab-
+    sharded ``psum_scatter`` on meshes with more than one device — each
+    device owns ``vocab/P`` bins instead of a replicated full-vocab
+    all-reduce — and falls back to ``psum`` on a single device (where a
+    collective is a no-op and the replicated layout is free).  Both
+    aggregations are bit-identical; ``False`` forces psum everywhere (the
+    equivalence baseline).  The choice is part of the executable-cache key.
     """
 
     def __init__(self, cache: Optional[ExecutableCache] = None,
-                 batch: bool = True, bucket: bool = True) -> None:
+                 batch: bool = True, bucket: bool = True,
+                 reduce_scatter: bool = True) -> None:
         self.cache = cache if cache is not None else ExecutableCache()
         self.batch = batch
         self.bucket = bucket
+        self.reduce_scatter = reduce_scatter
         self.batches_run = 0
         self.cns_run = 0
         self.bytes_shipped = 0
@@ -204,26 +264,33 @@ class FCTEngine:
         if not reduce_cns and self.bucket:
             n_stack = -(-n_stack // CN_BUCKET_MIN) * CN_BUCKET_MIN
         x64 = x64_flag()
+        # vocab-sharded reduce-scatter only pays (and only differs from
+        # psum) on real multi-device meshes; the aggregation kind rides the
+        # cache key so both program variants can coexist
+        rs = self.reduce_scatter and sig.n_devices > 1
+        agg = "rs" if rs else "psum"
         if store is not None:
             from repro.runtime.store import store_group_args
             (fact, dims), shipped = store_group_args(store, group, sig,
                                                      n_stack)
             kind = "fct_store" if reduce_cns else "fct_store_percn"
-            key = (kind, sig, n_stack, histogram_backend, mesh, x64)
+            key = (kind, sig, n_stack, histogram_backend, mesh, x64, agg)
             fn = self.cache.get_or_build(
                 key, lambda: _build_store_fn(sig, mesh, histogram_backend,
                                              n_stack,
-                                             reduce_cns=reduce_cns))
+                                             reduce_cns=reduce_cns,
+                                             reduce_scatter=rs))
             self.bytes_shipped += shipped
         else:
             fact, dims = stack_group(group, sig)
             if n_stack > len(group):
                 fact, dims = pad_cn_axis(fact, dims, n_stack)
             kind = "fct_batched" if reduce_cns else "fct_batched_percn"
-            key = (kind, sig, n_stack, histogram_backend, mesh, x64)
+            key = (kind, sig, n_stack, histogram_backend, mesh, x64, agg)
             fn = self.cache.get_or_build(
                 key, lambda: _build_batched_fn(sig, mesh, histogram_backend,
-                                               reduce_cns=reduce_cns))
+                                               reduce_cns=reduce_cns,
+                                               reduce_scatter=rs))
             shipped = sum(v.nbytes for v in fact.values()) + sum(
                 v.nbytes for d in dims for v in d.values())
             columns = shipped - fact["send"].nbytes - sum(
@@ -277,10 +344,14 @@ class FCTEngine:
                 for sig, idxs in self._group(plans, accum)]
 
     def collect_total(self, pending, vocab: int) -> np.ndarray:
-        """Block on an ``individual=False`` handle: total freq[vocab]."""
+        """Block on an ``individual=False`` handle: total freq[vocab].
+
+        Reduce-scattered results arrive vocab-sharded and padded to a
+        multiple of P; the gather reads each device's owned shard once and
+        the (structurally zero) pad bins are sliced off."""
         total = np.zeros((vocab,), np.int64)
         for _, lazy in pending:
-            total += self._collect(lazy)
+            total += self._collect(lazy)[:vocab]
         return total
 
     def collect_individual(self, pending, n_plans: int,
@@ -288,7 +359,8 @@ class FCTEngine:
         """Block on an ``individual=True`` handle: freq[n_plans, vocab]."""
         out = np.zeros((n_plans, vocab), np.int64)
         for idxs, lazy in pending:
-            out[idxs] = self._collect(lazy)[:len(idxs)]  # drop CN-axis pad
+            # drop the CN-axis pad and the reduce-scatter vocab pad
+            out[idxs] = self._collect(lazy)[:len(idxs), :vocab]
         return out
 
     def run_plans(self, plans: Sequence[CNPlan], mesh: Mesh,
