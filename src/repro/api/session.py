@@ -318,7 +318,10 @@ class FCTSession:
             terms = [self.tokenizer.decode(t) for t in ids]
         else:
             terms = [f"<{int(t)}>" for t in ids]
-        self.queries_served += 1
+        # _finish runs on finalizer, flush-pool and sync-caller threads
+        # concurrently — the bump must not lose updates
+        with self._plan_lock:
+            self.queries_served += 1
         return FCTResponse(
             terms=terms, term_ids=ids, freqs=f, all_freqs=freq,
             n_cns=planned.n_cns, n_joined_cns=len(planned.plans),

@@ -21,9 +21,9 @@ the eviction bookkeeping.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Any, Callable, Dict, Hashable, Optional
-
 
 import jax
 
@@ -69,6 +69,7 @@ class ExecutableCache:
         if max_entries is not None and max_entries < 1:
             raise ValueError(f"max_entries must be >= 1, got {max_entries}")
         self._fns = LruDict(max_entries)
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
         self.traces = 0
@@ -83,19 +84,29 @@ class ExecutableCache:
 
     def get_or_build(self, key: Hashable, builder: Callable[[], Callable]):
         """Return the cached executable for ``key``, building (and jitting)
-        it on first use.  ``builder`` returns the un-jitted program."""
-        fn = self._fns.hit(key)
-        if fn is not None:
-            self.hits += 1
-            return fn
-        self.misses += 1
+        it on first use.  ``builder`` returns the un-jitted program.
+
+        The cache is shared process-wide across sessions and serving
+        tenants, so all bookkeeping happens under ``_lock``.  ``builder``
+        runs outside the lock (it may be slow); if two threads race the
+        same cold key, ``LruDict.put``'s first-writer-wins keeps exactly
+        one executable and the loser's build is discarded.
+        """
+        with self._lock:
+            fn = self._fns.hit(key)
+            if fn is not None:
+                self.hits += 1
+                return fn
+            self.misses += 1
         inner = builder()
 
         def traced(*args: Any):
-            self.traces += 1  # runs only under tracing, not per call
+            with self._lock:  # runs only under tracing, not per call
+                self.traces += 1
             return inner(*args)
 
-        return self._fns.put(key, jax.jit(traced))
+        with self._lock:
+            return self._fns.put(key, jax.jit(traced))
 
     def __contains__(self, key: Hashable) -> bool:
         return key in self._fns
@@ -104,14 +115,16 @@ class ExecutableCache:
         return len(self._fns)
 
     def clear(self) -> None:
-        self._fns.clear()
-        self._fns.evictions = 0
-        self.hits = self.misses = self.traces = 0
+        with self._lock:
+            self._fns.clear()
+            self._fns.evictions = 0
+            self.hits = self.misses = self.traces = 0
 
     def stats(self) -> Dict[str, int]:
-        return {"entries": len(self), "hits": self.hits,
-                "misses": self.misses, "traces": self.traces,
-                "evictions": self.evictions}
+        with self._lock:
+            return {"entries": len(self), "hits": self.hits,
+                    "misses": self.misses, "traces": self.traces,
+                    "evictions": self.evictions}
 
 
 _GLOBAL_CACHE = ExecutableCache()

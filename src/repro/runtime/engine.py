@@ -47,14 +47,15 @@ is retired along with the forced int64 ref fallback).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+import threading
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.accum import AccumPolicy
 from repro.core.plan import CNPlan
@@ -225,6 +226,9 @@ class FCTEngine:
         self.batch = batch
         self.bucket = bucket
         self.reduce_scatter = reduce_scatter
+        # the default engine is shared process-wide (sessions, serving
+        # tenants, sync callers), so its traffic counters are guarded
+        self._stats_lock = threading.Lock()
         self.batches_run = 0
         self.cns_run = 0
         self.bytes_shipped = 0
@@ -280,7 +284,8 @@ class FCTEngine:
                                              n_stack,
                                              reduce_cns=reduce_cns,
                                              reduce_scatter=rs))
-            self.bytes_shipped += shipped
+            with self._stats_lock:
+                self.bytes_shipped += shipped
         else:
             fact, dims = stack_group(group, sig)
             if n_stack > len(group):
@@ -295,11 +300,13 @@ class FCTEngine:
                 v.nbytes for d in dims for v in d.values())
             columns = shipped - fact["send"].nbytes - sum(
                 d["send"].nbytes for d in dims)
-            self.bytes_shipped += shipped
-            self.column_bytes_shipped += columns
+            with self._stats_lock:
+                self.bytes_shipped += shipped
+                self.column_bytes_shipped += columns
         out = fn(fact, dims)
-        self.batches_run += 1
-        self.cns_run += len(group)
+        with self._stats_lock:
+            self.batches_run += 1
+            self.cns_run += len(group)
         return out
 
     @staticmethod
@@ -390,9 +397,10 @@ class FCTEngine:
 
     def stats(self) -> dict:
         out = self.cache.stats()
-        out.update(batches_run=self.batches_run, cns_run=self.cns_run,
-                   bytes_shipped=self.bytes_shipped,
-                   column_bytes_shipped=self.column_bytes_shipped)
+        with self._stats_lock:
+            out.update(batches_run=self.batches_run, cns_run=self.cns_run,
+                       bytes_shipped=self.bytes_shipped,
+                       column_bytes_shipped=self.column_bytes_shipped)
         return out
 
 

@@ -200,8 +200,11 @@ class DynamicBatcher:
             self._closed = True
             self._cv.notify()
         self._thread.join()
-        # safe to read after the join: the collector thread appended every
-        # pooled flush before exiting, and no new windows can open
-        for fut in self._outstanding:
+        # after the join the collector has appended every pooled flush and no
+        # new windows can open, but a concurrent close() racing this one must
+        # not iterate a list the other is clearing — swap it out under the
+        # condition first
+        with self._cv:
+            outstanding, self._outstanding = self._outstanding, []
+        for fut in outstanding:
             fut.result()
-        self._outstanding = []
