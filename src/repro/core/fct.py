@@ -140,9 +140,12 @@ def _device_fct_local(fact, dims, *, domains: Tuple[int, ...], vocab: int,
 def _device_fct(fact, dims, *, domains: Tuple[int, ...], vocab: int,
                 histogram_backend: str):
     """One worker's MR¹+MR² for one CN.  All inputs are this device's shard."""
+    # the cast is a trace-time no-op (the local histogram already carries
+    # the policy dtype) but pins the collective's accumulator width HERE,
+    # where the psum is, instead of inheriting it from upstream
     hist = _device_fct_local(fact, dims, domains=domains, vocab=vocab,
                              histogram_backend=histogram_backend)
-    return lax.psum(hist, "w")
+    return lax.psum(hist.astype(_acc_dtype()), "w")
 
 
 def _plan_to_arrays(plan: CNPlan):
@@ -209,7 +212,9 @@ def _device_job2(vol_arrays, *, vocab, histogram_backend):
         hist = hist + weighted_histogram(d["text"],
                                          d["vol"].astype(hist.dtype), vocab,
                                          backend=histogram_backend)
-    return lax.psum(hist, "w")
+    # same contract as _device_fct: the collective's accumulator width is
+    # pinned at the collective, not inherited from the weight dtype
+    return lax.psum(hist.astype(_acc_dtype()), "w")
 
 
 def run_cn_plan_two_jobs(plan: CNPlan, mesh: Mesh,
