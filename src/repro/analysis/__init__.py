@@ -1,0 +1,29 @@
+"""repro.analysis: repo-invariant static analysis, run in CI.
+
+Two layers (see README.md for the rule catalog and rationale):
+
+* **AST lint** (:mod:`repro.analysis.lint` + :mod:`repro.analysis.rules`) —
+  a small rule framework over :mod:`ast` enforcing the invariants PRs 1-6
+  established but nothing checked: trace containment (R1), accumulation
+  dtype discipline (R2), lock discipline in threaded modules (R3), no host
+  sync in engine hot paths (R4), epoch-fenced cache writes (R5).  False
+  positives are waived inline with a mandatory justification string
+  (``# fct-lint: waive[R3] -- why this is safe``).
+
+* **jaxpr contract checker** (:mod:`repro.analysis.contracts`) — traces the
+  four runtime program families for representative ``PlanSignature``
+  buckets under both :class:`~repro.core.accum.AccumPolicy` modes and
+  asserts properties of the *compiled plan*: exactly one reduction
+  collective per dispatch, integer-only histogram dataflow, a vocab-sharded
+  O(vocab/P) output transfer budget, and pow-2-bucketed array dims.
+
+``python -m repro.analysis`` checks the tree (``--json`` for the
+machine-readable report, ``--contracts`` to add the jaxpr layer).
+Importing this package never imports jax — only the contract layer does,
+lazily — so the lint can run in dependency-free contexts.
+"""
+from __future__ import annotations
+
+from repro.analysis.lint import LintReport, Violation, Waiver, lint_paths
+
+__all__ = ["LintReport", "Violation", "Waiver", "lint_paths"]

@@ -1,0 +1,89 @@
+"""Shared configuration of the static-analysis pass.
+
+Everything path-shaped in here is **relative to the package root**
+``src/repro`` (the lint walks that tree); rule classes read their scope
+from this module so the policy lives in one place and the rules stay pure
+mechanism.
+
+``EXCLUDED_DIRS`` is the single exclusion list shared with ruff: the
+vestigial seed directories (model zoo, training loop, DP utilities and
+their configs) predate the FCT runtime and are not held to its invariants.
+``pyproject.toml``'s ``extend-exclude`` must mirror this list —
+``tests/test_analysis.py`` asserts the two stay in sync.
+"""
+from __future__ import annotations
+
+# -- shared exclusions (mirrored in pyproject.toml [tool.ruff]) -------------
+
+#: vestigial seed dirs, relative to src/repro — excluded from ruff AND the
+#: custom lint (tests/test_analysis.py keeps pyproject.toml in sync)
+EXCLUDED_DIRS = ("models", "configs", "train", "distributed")
+
+# -- R1: trace containment ---------------------------------------------------
+
+#: directories whose modules may build traced/compiled programs.  Anywhere
+#: else, a bare ``jax.jit`` / ``shard_map`` / ``pl.pallas_call`` bypasses
+#: the PlanSignature-keyed executable cache and reintroduces retraces.
+TRACE_ALLOWED_DIRS = ("runtime", "kernels")
+
+#: spellings of program-building entry points R1 looks for, as dotted call
+#: paths resolved through the module's imports
+TRACE_ENTRY_POINTS = ("jax.jit", "shard_map", "pallas_call")
+
+# -- R2: accumulation discipline ---------------------------------------------
+
+#: modules whose device bodies accumulate histogram/volume values: every
+#: ``jnp.sum`` must pass an explicit ``dtype=`` and every ``lax.psum`` /
+#: ``lax.psum_scatter`` operand must be explicitly cast (``.astype`` or an
+#: explicit-dtype reduction) in the same function — the AccumPolicy
+#: overflow contract of PR 5 must be local, not inherited by accident.
+ACCUM_MODULES = ("core/fct.py", "runtime/engine.py")
+
+# -- R3: lock discipline -----------------------------------------------------
+
+#: threaded modules -> the lock attribute names that guard their shared
+#: state.  Outside ``__init__``-like constructors, writes to underscore-
+#: prefixed ``self._x`` fields and read-modify-write (``+=``) updates of
+#: ANY ``self.x`` counter must happen inside ``with self.<lock>:``.
+THREADED_MODULES = {
+    "api/session.py": ("_plan_lock", "_engine_lock", "_pipeline_lock"),
+    "api/pipeline.py": ("_submit_lock",),
+    "serve/gateway.py": ("_lock",),
+    "serve/batcher.py": ("_cv", "_lock"),
+    "serve/registry.py": ("_lock",),
+    "serve/result_cache.py": ("_lock",),
+    "runtime/store.py": ("_lock",),
+    "runtime/cache.py": ("_lock",),
+    "runtime/engine.py": ("_stats_lock",),
+}
+
+#: constructor-like functions where unlocked writes are fine (the object
+#: is not yet shared)
+UNLOCKED_FUNCTIONS = ("__init__", "__post_init__", "__new__")
+
+# -- R4: no host sync in hot paths -------------------------------------------
+
+#: module -> function names allowed to synchronize with the device.  A
+#: ``np.asarray(traced)`` / ``jax.device_get`` / ``.block_until_ready()``
+#: anywhere else in the module blocks the async dispatch pipeline.
+HOST_SYNC_ALLOWED = {
+    "runtime/engine.py": ("_collect", "collect_total", "collect_individual"),
+}
+
+#: call spellings that force a host<->device synchronization
+HOST_SYNC_CALLS = ("np.asarray", "numpy.asarray", "jax.device_get")
+HOST_SYNC_METHODS = ("block_until_ready",)
+
+# -- R5: epoch fencing -------------------------------------------------------
+
+#: module -> (cache attribute names, fence names).  A ``.put(...)`` into
+#: one of the named caches must either pass a ``generation=`` keyword or be
+#: preceded (in the same function) by a comparison against one of the fence
+#: names — the invalidation protocol of PR 4: results computed from
+#: pre-mutation data may be SERVED once but must never be CACHED.
+EPOCH_FENCED_CACHES = {
+    "api/session.py": (("_tuple_sets", "_plan_cache"), ("_data_epoch",)),
+    "runtime/store.py": (("_entries",), ("epoch",)),
+    "serve/gateway.py": (("results",), ("generation",)),
+    "serve/result_cache.py": (("_entries",), ("generation",)),
+}

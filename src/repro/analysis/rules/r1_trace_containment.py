@@ -1,0 +1,62 @@
+"""R1: trace containment — program building stays behind the runtime.
+
+PR 1's latency win (cold 2.1s -> warm 30ms) rests on every traced program
+living in the ``PlanSignature``-keyed :class:`~repro.runtime.cache.
+ExecutableCache`: a cache hit replays a compiled executable, so warm
+queries never retrace.  A ``jax.jit`` / ``shard_map`` / ``pl.pallas_call``
+anywhere outside ``runtime/`` and ``kernels/`` builds programs the cache
+cannot see — each call site re-traces on every shape variation and the
+zero-retrace warm-path invariant silently dies.
+
+The rule flags every *reference* to those entry points (call, decorator, or
+``functools.partial(jax.jit, ...)`` argument) in out-of-scope modules.
+Legitimate out-of-runtime tracing — the seed equivalence baselines in
+``core/fct.py``, one-shot launchers — carries an inline waiver naming why
+the retrace risk does not apply.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.config import TRACE_ALLOWED_DIRS, TRACE_ENTRY_POINTS
+from repro.analysis.lint import FileContext, Rule, Violation, call_path
+
+
+class R1TraceContainment(Rule):
+    rule_id = "R1"
+    title = "trace containment: jit/shard_map/pallas_call only in runtime|kernels"
+
+    def applies(self, ctx: FileContext) -> bool:
+        head = ctx.rel.split("/", 1)[0]
+        return head not in TRACE_ALLOWED_DIRS
+
+    def _is_entry_point(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Attribute):
+            path = call_path(node)
+            return any(path == ep or path.endswith("." + ep)
+                       for ep in TRACE_ENTRY_POINTS)
+        if isinstance(node, ast.Name):
+            return node.id in TRACE_ENTRY_POINTS and node.id != "jit"
+        return False
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        seen = set()
+        for node in ast.walk(ctx.tree):
+            # references, not just calls: catches decorator and
+            # functools.partial(jax.jit, ...) spellings too
+            if not self._is_entry_point(node):
+                continue
+            # don't double-report x.y inside a call to x.y
+            line = getattr(node, "lineno", 0)
+            if line in seen:
+                continue
+            seen.add(line)
+            spelling = (call_path(node) if isinstance(node, ast.Attribute)
+                        else node.id)
+            yield ctx.violation(
+                node, self.rule_id,
+                f"{spelling} outside runtime/|kernels/ bypasses the "
+                f"PlanSignature-keyed executable cache (retraces on every "
+                f"shape); route through repro.runtime or waive with the "
+                f"reason retraces cannot occur here")

@@ -1,0 +1,107 @@
+"""R2: accumulation discipline — histogram sums carry an explicit dtype.
+
+PR 5's overflow contract: every device-side accumulation of histogram or
+volume values happens in the dtype of one explicit
+:class:`~repro.core.accum.AccumPolicy` (int32-checked / int64-exact), so a
+result's precision is fully described by the policy it advertises.  The
+contract breaks *quietly* when a reduction inherits whatever dtype its
+operand happened to carry: an upstream refactor that changes a weight
+dtype flips the accumulator width of every downstream sum with no local
+diff.
+
+In the accumulation modules this rule requires, per function:
+
+* ``jnp.sum(...)`` passes an explicit ``dtype=`` keyword, and
+* the operand of ``lax.psum(...)`` / ``lax.psum_scatter(...)`` is
+  *locally* blessed — produced (possibly through dtype-preserving
+  ``jnp.pad`` / ``reshape``) by an ``.astype(...)`` cast or an
+  explicit-dtype reduction inside the same function.
+
+The blessing walk is a straight-line approximation (assignments in lexical
+order), which is exactly the point: the cast must be visible right where
+the collective is, not inferred across call boundaries.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from repro.analysis.config import ACCUM_MODULES
+from repro.analysis.lint import FileContext, Rule, Violation, call_path
+
+_SUM_CALLS = ("jnp.sum", "jax.numpy.sum")
+_COLLECTIVES = ("lax.psum", "jax.lax.psum",
+                "lax.psum_scatter", "jax.lax.psum_scatter")
+#: dtype-preserving wrappers the blessing may pass through (first arg)
+_PRESERVING = ("jnp.pad", "jnp.reshape", "jnp.squeeze", "jnp.expand_dims")
+_PRESERVING_METHODS = ("reshape", "squeeze")
+
+
+def _has_dtype_kwarg(call: ast.Call) -> bool:
+    return any(kw.arg == "dtype" for kw in call.keywords)
+
+
+def _blessed_expr(expr: ast.AST, blessed: Set[str]) -> bool:
+    if isinstance(expr, ast.Name):
+        return expr.id in blessed
+    if isinstance(expr, ast.Call):
+        if isinstance(expr.func, ast.Attribute):
+            if expr.func.attr == "astype":
+                return True
+            if expr.func.attr in _PRESERVING_METHODS:
+                return _blessed_expr(expr.func.value, blessed)
+        path = call_path(expr.func)
+        if path in _SUM_CALLS:
+            return _has_dtype_kwarg(expr)
+        if path in _PRESERVING and expr.args:
+            return _blessed_expr(expr.args[0], blessed)
+    return False
+
+
+class R2AccumDiscipline(Rule):
+    rule_id = "R2"
+    title = "accumulation discipline: explicit AccumPolicy dtype on sums"
+
+    def applies(self, ctx: FileContext) -> bool:
+        return ctx.rel in ACCUM_MODULES
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            path = call_path(node.func)
+            if path in _SUM_CALLS and not _has_dtype_kwarg(node):
+                yield ctx.violation(
+                    node, self.rule_id,
+                    "jnp.sum on the histogram path must pass an explicit "
+                    "dtype= derived from the AccumPolicy "
+                    "(e.g. dtype=sig.accum.dtype)")
+            elif path in _COLLECTIVES and node.args:
+                if not self._operand_blessed(ctx, node):
+                    yield ctx.violation(
+                        node, self.rule_id,
+                        f"{path} operand must be explicitly cast to the "
+                        f"AccumPolicy dtype in this function (.astype(...) "
+                        f"or jnp.sum(..., dtype=...)); inheriting the "
+                        f"operand's incidental dtype breaks the PR 5 "
+                        f"overflow contract")
+
+    def _operand_blessed(self, ctx: FileContext, call: ast.Call) -> bool:
+        operand = call.args[0]
+        blessed: Set[str] = set()
+        fn = ctx.enclosing_function(call)
+        if fn is not None:
+            # straight-line pass: bless/unbless single-name assignments in
+            # lexical order up to the collective
+            assigns = [n for n in ast.walk(fn)
+                       if isinstance(n, ast.Assign)
+                       and n.lineno < call.lineno
+                       and len(n.targets) == 1
+                       and isinstance(n.targets[0], ast.Name)]
+            for assign in sorted(assigns, key=lambda a: a.lineno):
+                name = assign.targets[0].id
+                if _blessed_expr(assign.value, blessed):
+                    blessed.add(name)
+                else:
+                    blessed.discard(name)
+        return _blessed_expr(operand, blessed)

@@ -1,0 +1,53 @@
+"""R4: no host synchronization in dispatch hot paths.
+
+The engine's latency model (PR 1/2) assumes ``dispatch_plans`` is purely
+*asynchronous*: jax enqueues device work and returns in microseconds, so
+the session pipeline overlaps planning of query k+1 with device compute of
+query k, and a burst keeps several queries in flight.  One stray
+``np.asarray(traced)`` / ``jax.device_get`` / ``.block_until_ready()`` in
+the dispatch path turns that into a synchronous round-trip per group —
+the pipeline still "works", it just quietly serializes.
+
+Host syncs are confined to the configured collection functions
+(``_collect`` and the ``collect_*`` entry points, where blocking is the
+documented contract); anywhere else in the module they are flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.config import (HOST_SYNC_ALLOWED, HOST_SYNC_CALLS,
+                                   HOST_SYNC_METHODS)
+from repro.analysis.lint import FileContext, Rule, Violation, call_path
+
+
+class R4HostSync(Rule):
+    rule_id = "R4"
+    title = "no host sync outside collection functions"
+
+    def applies(self, ctx: FileContext) -> bool:
+        return ctx.rel in HOST_SYNC_ALLOWED
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        allowed = HOST_SYNC_ALLOWED[ctx.rel]
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            spelling = None
+            path = call_path(node.func)
+            if path in HOST_SYNC_CALLS:
+                spelling = path
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr in HOST_SYNC_METHODS):
+                spelling = f".{node.func.attr}()"
+            if spelling is None:
+                continue
+            fn = ctx.enclosing_function(node)
+            if fn is not None and fn.name in allowed:
+                continue
+            where = fn.name if fn is not None else "<module>"
+            yield ctx.violation(
+                node, self.rule_id,
+                f"{spelling} in '{where}' blocks the async dispatch path "
+                f"(host syncs belong in {', '.join(allowed)} only)")

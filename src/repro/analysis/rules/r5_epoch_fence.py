@@ -1,0 +1,73 @@
+"""R5: epoch fencing — cache inserts are dominated by a generation check.
+
+PR 4's invalidation protocol: ``invalidate()`` bumps an epoch/generation
+counter under the owning lock, and every slow path that computes a value
+OUTSIDE the lock (tuple-set build, plan, store upload, query dispatch)
+re-checks the counter before inserting.  Results computed from
+pre-mutation data may be *served* once — the caller asked before the
+mutation — but must never be *cached*, or a stale histogram outlives the
+invalidation forever.
+
+The rule: in the configured modules, a ``.put(...)`` into one of the named
+session/gateway caches must either pass a ``generation=`` keyword (the
+:class:`~repro.serve.result_cache.ResultCache` protocol) or share its
+function with a comparison against one of the module's fence names
+(``_data_epoch`` / ``epoch`` / ``generation``) on an earlier line — the
+static shadow of "the insert is dominated by an epoch comparison".
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.config import EPOCH_FENCED_CACHES
+from repro.analysis.lint import FileContext, Rule, Violation
+
+
+def _mentions_fence(node: ast.AST, fences) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in fences:
+            return True
+        if isinstance(sub, ast.Attribute) and sub.attr in fences:
+            return True
+    return False
+
+
+class R5EpochFence(Rule):
+    rule_id = "R5"
+    title = "epoch fencing: cache puts dominated by a generation check"
+
+    def applies(self, ctx: FileContext) -> bool:
+        return ctx.rel in EPOCH_FENCED_CACHES
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        cache_attrs, fences = EPOCH_FENCED_CACHES[ctx.rel]
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "put"
+                    and isinstance(node.func.value, ast.Attribute)
+                    and node.func.value.attr in cache_attrs):
+                continue
+            if any(kw.arg == "generation" for kw in node.keywords):
+                continue
+            if self._fenced(ctx, node, fences):
+                continue
+            cache = ast.unparse(node.func.value)
+            yield ctx.violation(
+                node, self.rule_id,
+                f"insert into {cache} is not dominated by an epoch/"
+                f"generation comparison ({', '.join(fences)}) and passes "
+                f"no generation= — a result computed from pre-mutation "
+                f"data could outlive invalidate()")
+
+    def _fenced(self, ctx: FileContext, put: ast.Call, fences) -> bool:
+        fn = ctx.enclosing_function(put)
+        if fn is None:
+            return False
+        for sub in ast.walk(fn):
+            if (isinstance(sub, ast.Compare)
+                    and sub.lineno <= put.lineno
+                    and _mentions_fence(sub, fences)):
+                return True
+        return False

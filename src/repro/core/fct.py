@@ -165,6 +165,7 @@ def make_fct_program(plan: CNPlan, mesh: Mesh, histogram_backend: str = "auto"):
     domains = tuple(plan.key_domains[i] for i in plan.included)
     shard = P("w")
     specs_rel = {"text": shard, "keys": shard, "send": shard}
+    # fct-lint: waive[R1] -- seed equivalence baseline: one program per call by design; tests diff it against the cached engine
     fn = shard_map(
         lambda f, ds: _device_fct(
             {k: jnp.squeeze(v, 0) for k, v in f.items()},
@@ -182,6 +183,7 @@ def make_fct_program(plan: CNPlan, mesh: Mesh, histogram_backend: str = "auto"):
 def run_cn_plan(plan: CNPlan, mesh: Mesh,
                 histogram_backend: str = "auto") -> np.ndarray:
     fn, args = make_fct_program(plan, mesh, histogram_backend)
+    # fct-lint: waive[R1] -- equivalence baseline entry point; retraces per call are the point of comparison, not a leak
     freq = jax.jit(fn)(*args)
     return np.asarray(freq, np.int64)
 
@@ -241,6 +243,7 @@ def run_cn_plan_two_jobs(plan: CNPlan, mesh: Mesh,
     x64 = x64_flag()
     job1 = cache.get_or_build(
         ("fct_job1", sig, mesh, x64),
+        # fct-lint: waive[R1] -- builder runs inside the shared signature-keyed ExecutableCache: warm plans never retrace
         lambda: shard_map(
             lambda f, ds: _device_job1(
                 {k: jnp.squeeze(v, 0) for k, v in f.items()},
@@ -256,6 +259,7 @@ def run_cn_plan_two_jobs(plan: CNPlan, mesh: Mesh,
         _, vol_arrays = restore_checkpoint(checkpoint_dir, vol_arrays)
     job2 = cache.get_or_build(
         ("fct_job2", sig, histogram_backend, mesh, x64),
+        # fct-lint: waive[R1] -- builder runs inside the shared signature-keyed ExecutableCache: warm plans never retrace
         lambda: shard_map(
             lambda va: _device_job2(va, vocab=plan.vocab_size,
                                     histogram_backend=histogram_backend),
@@ -267,6 +271,7 @@ def run_cn_plan_two_jobs(plan: CNPlan, mesh: Mesh,
 def lower_cn_plan(plan: CNPlan, mesh: Mesh, histogram_backend: str = "auto"):
     """Lowered (uncompiled) program — benchmarks parse its HLO for bytes."""
     fn, args = make_fct_program(plan, mesh, histogram_backend)
+    # fct-lint: waive[R1] -- lowering-only benchmark probe: the program is inspected for HLO stats, never executed warm
     return jax.jit(fn).lower(*args)
 
 

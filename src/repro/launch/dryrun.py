@@ -114,6 +114,7 @@ def build_cell(cfg: ArchConfig, shape_name: str, mesh, rules: sh.ShardingRules,
                                   (shape.global_batch, 1), mesh)))
         pos = jax.ShapeDtypeStruct((), jnp.int32)
         fn = make_serve_step(cfg)
+        # fct-lint: waive[R1] -- one-shot AOT dry-run launcher (vestigial seed cell): lowered once per invocation, no warm path
         jfn = jax.jit(fn, donate_argnums=(1,) if donate else ())
         return jfn, (params, cache, tokens, pos)
 
@@ -122,6 +123,7 @@ def build_cell(cfg: ArchConfig, shape_name: str, mesh, rules: sh.ShardingRules,
     batch = _abstract(input_specs(cfg, shape_name), batch_sh)
     if shape.kind == "prefill":
         fn = lambda p, b: model_lib.forward(p, b, cfg)[0]
+        # fct-lint: waive[R1] -- one-shot AOT dry-run launcher (vestigial seed cell): lowered once per invocation, no warm path
         return jax.jit(fn), (params, batch)
     # train
     oshapes = jax.eval_shape(lambda: init_opt_state(pshapes))
@@ -129,6 +131,7 @@ def build_cell(cfg: ArchConfig, shape_name: str, mesh, rules: sh.ShardingRules,
     oshard = sh.to_shardings(ospecs, oshapes, mesh)
     opt = _abstract(oshapes, oshard)
     fn = make_train_step(cfg)
+    # fct-lint: waive[R1] -- one-shot AOT dry-run launcher (vestigial seed cell): lowered once per invocation, no warm path
     jfn = jax.jit(fn, donate_argnums=(0, 1) if donate else ())
     return jfn, (params, opt, batch)
 
