@@ -6,9 +6,9 @@ import time
 
 import numpy as np
 
-from repro.data.tpch import TpchConfig, generate, generate_customer, \
-    plant_keywords, prejoin_orders_customer
 from repro.data.schema import JoinEdge, StarSchema
+from repro.data.tpch import (TpchConfig, generate, generate_customer,
+                             plant_keywords, prejoin_orders_customer)
 
 
 def timed(fn, warmup: int = 1, iters: int = 3) -> float:

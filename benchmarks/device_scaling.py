@@ -204,7 +204,7 @@ def _spawn(n_devices: int, quick: bool, x64: bool) -> dict:
         raise RuntimeError(
             f"device_scaling worker n={n_devices} x64={x64} failed:\n"
             f"{proc.stdout[-2000:]}\n{proc.stderr[-4000:]}")
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][-1]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT")][-1]
     return json.loads(line[len("RESULT"):])
 
 

@@ -8,10 +8,9 @@ v5e rates) so the §Perf napkin math is reproducible.
 """
 from __future__ import annotations
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit, timed
 from repro.kernels.fct_count import ref as fct_ref
@@ -27,13 +26,13 @@ def run():
     rng = np.random.default_rng(0)
 
     # fct_count: N x L tokens histogrammed over V
-    n, l, v = 8192, 16, 32768
-    toks = jnp.asarray(rng.integers(0, v, (n, l)), jnp.int32)
+    n, tl, v = 8192, 16, 32768
+    toks = jnp.asarray(rng.integers(0, v, (n, tl)), jnp.int32)
     w = jnp.asarray(rng.integers(0, 9, (n,)), jnp.int32)
     ref_fn = jax.jit(lambda t, ww: fct_ref.weighted_histogram(t, ww, v))
     us = timed(lambda: jax.block_until_ready(ref_fn(toks, w)))
-    mxu_s = (2.0 * n * l * v) / PEAK           # one-hot matmul flops
-    hbm_s = (n * l * 4 + v * 4) / HBM
+    mxu_s = (2.0 * n * tl * v) / PEAK           # one-hot matmul flops
+    hbm_s = (n * tl * 4 + v * 4) / HBM
     emit("fct_count/ref_segment_sum", us,
          f"tpu_kernel_est_us={max(mxu_s, hbm_s) * 1e6:.1f}")
 

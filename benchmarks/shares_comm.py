@@ -7,10 +7,6 @@ choice — the paper's 3·∛(krst) optimum shows up as ratio 1.0.
 """
 from __future__ import annotations
 
-import math
-
-import numpy as np
-
 from benchmarks.common import emit, make_dataset
 from repro.core.candidate_network import TupleSets, enumerate_star_cns, prune_empty_cns
 from repro.core.plan import build_cn_plan

@@ -9,8 +9,6 @@ ratios vs No-Adjust.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import emit, make_dataset
 from repro.core.candidate_network import TupleSets, enumerate_star_cns, prune_empty_cns
 from repro.core.plan import build_cn_plan

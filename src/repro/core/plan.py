@@ -26,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -206,12 +206,12 @@ def _send_table(pairs_src: np.ndarray, pairs_dst: np.ndarray,
     C = max(1, int(counts.max()))
     table = np.full((P, P, C), -1, np.int32)
     order = np.lexsort((pairs_local, pairs_dst, pairs_src))
-    s, d, l = pairs_src[order], pairs_dst[order], pairs_local[order]
+    s, d, loc = pairs_src[order], pairs_dst[order], pairs_local[order]
     # position within each (src, dst) group
     group = s.astype(np.int64) * P + d
     start = np.searchsorted(group, group, side="left")
     pos = np.arange(len(group)) - start
-    table[s, d, pos] = l
+    table[s, d, pos] = loc
     return table, int(len(pairs_src))
 
 

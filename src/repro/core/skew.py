@@ -13,7 +13,7 @@ impossible by construction, up to estimation error).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import Sequence
 
 import numpy as np
 

@@ -13,7 +13,7 @@ PAD included — callers mask before top-k, matching Def. 6's "not in q").
 from __future__ import annotations
 
 import itertools
-from typing import List, Sequence
+from typing import Sequence
 
 import numpy as np
 

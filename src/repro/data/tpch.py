@@ -16,7 +16,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.data.schema import JoinEdge, Relation, StarSchema, PAD_ID
+from repro.data.schema import PAD_ID, JoinEdge, Relation, StarSchema
 
 
 @dataclasses.dataclass(frozen=True)

@@ -73,19 +73,19 @@ def limb_split(contraction: int, acc_bits: int):
 # ---------------------------------------------------------------------------
 
 def _fct_count_kernel(tokens_ref, weights_ref, hist_ref, *, vocab_block: int):
-    nb, l = tokens_ref.shape
+    nb, tl = tokens_ref.shape
     v0 = pl.program_id(0) * vocab_block
 
     @pl.when(pl.program_id(1) == 0)
     def _init():
         hist_ref[...] = jnp.zeros_like(hist_ref)
 
-    tok = tokens_ref[...].reshape(nb * l)
+    tok = tokens_ref[...].reshape(nb * tl)
     # broadcast-reshape, not jnp.repeat: no materialized gather on the VPU
-    w = jnp.broadcast_to(weights_ref[...][:, None], (nb, l))
-    w = w.reshape(nb * l).astype(jnp.float32)
+    w = jnp.broadcast_to(weights_ref[...][:, None], (nb, tl))
+    w = w.reshape(nb * tl).astype(jnp.float32)
     w = jnp.where(tok == PAD_ID, 0.0, w)
-    vocab_ids = v0 + jax.lax.broadcasted_iota(jnp.int32, (nb * l, vocab_block), 1)
+    vocab_ids = v0 + jax.lax.broadcasted_iota(jnp.int32, (nb * tl, vocab_block), 1)
     onehot = (tok[:, None] == vocab_ids).astype(jnp.float32)
     # [1, NB*L] @ [NB*L, VB] on the MXU; HIGHEST forbids the default
     # bfloat16-pass lowering, which would break the < 2^24 exactness claim
@@ -106,14 +106,14 @@ def fct_count_pallas(tokens: jnp.ndarray, weights: jnp.ndarray, vocab: int,
     float32 accumulation: exact only for totals < 2^24.  Integer weights
     should use :func:`fct_count_pallas_exact` (ops.py dispatches).
     """
-    n, l = tokens.shape
+    n, tl = tokens.shape
     assert n % token_block == 0 and vocab % vocab_block == 0
     grid = (vocab // vocab_block, n // token_block)
     out = pl.pallas_call(
         functools.partial(_fct_count_kernel, vocab_block=vocab_block),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((token_block, l), lambda i, j: (j, 0)),
+            pl.BlockSpec((token_block, tl), lambda i, j: (j, 0)),
             pl.BlockSpec((token_block,), lambda i, j: (j,)),
         ],
         out_specs=pl.BlockSpec((vocab_block,), lambda i, j: (i,)),
@@ -129,7 +129,7 @@ def fct_count_pallas(tokens: jnp.ndarray, weights: jnp.ndarray, vocab: int,
 
 def _fct_count_exact_kernel(tokens_ref, limbs_ref, acc_ref, *,
                             vocab_block: int, limb_bits: int):
-    nb, l = tokens_ref.shape
+    nb, tl = tokens_ref.shape
     n_limbs = limbs_ref.shape[1]
     v0 = pl.program_id(0) * vocab_block
 
@@ -137,15 +137,15 @@ def _fct_count_exact_kernel(tokens_ref, limbs_ref, acc_ref, *,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    tok = tokens_ref[...].reshape(nb * l)
+    tok = tokens_ref[...].reshape(nb * tl)
     valid = (tok != PAD_ID).astype(jnp.float32)
-    vocab_ids = v0 + jax.lax.broadcasted_iota(jnp.int32, (nb * l, vocab_block), 1)
+    vocab_ids = v0 + jax.lax.broadcasted_iota(jnp.int32, (nb * tl, vocab_block), 1)
     onehot = (tok[:, None] == vocab_ids).astype(jnp.float32)
     # limbs [NB, K] -> [K, NB*L] (broadcast-reshape per row, PAD masked);
     # each row holds one limb of every token's weight, all < 2^limb_bits
     limbs = limbs_ref[...].astype(jnp.float32).T
-    limbs = jnp.broadcast_to(limbs[:, :, None], (n_limbs, nb, l))
-    limbs = limbs.reshape(n_limbs, nb * l) * valid[None, :]
+    limbs = jnp.broadcast_to(limbs[:, :, None], (n_limbs, nb, tl))
+    limbs = limbs.reshape(n_limbs, nb * tl) * valid[None, :]
     # [K, NB*L] @ [NB*L, VB] on the MXU: every limb's tile contribution in
     # one matmul; each partial sum < 2^limb_bits * NB*L <= 2^24, so the
     # float32 result is an exact integer and the int32 cast is lossless.
@@ -179,14 +179,14 @@ def fct_count_pallas_exact(tokens: jnp.ndarray, weights: jnp.ndarray,
     2^64 for int64) — including wrap-around, so the engine's int32 overflow
     check sees exactly what a plain int32 accumulation would have produced.
     """
-    n, l = tokens.shape
+    n, tl = tokens.shape
     assert n % token_block == 0 and vocab % vocab_block == 0
     assert jnp.issubdtype(weights.dtype, jnp.integer), weights.dtype
     # exactness is modulo the weight dtype's full width (int16/uint64/...
     # included): the limb count must cover it and the recombination shifts
     # must stop at it
     acc_bits = jnp.iinfo(weights.dtype).bits
-    limb_bits, n_limbs = limb_split(token_block * l, acc_bits)
+    limb_bits, n_limbs = limb_split(token_block * tl, acc_bits)
     mask = (1 << limb_bits) - 1
     # split outside the kernel: limb k holds bits [limb_bits*k, limb_bits*(k+1))
     # of each weight's two's-complement pattern (arithmetic >> sign-extends,
@@ -199,7 +199,7 @@ def fct_count_pallas_exact(tokens: jnp.ndarray, weights: jnp.ndarray,
                           limb_bits=limb_bits),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((token_block, l), lambda i, j: (j, 0)),
+            pl.BlockSpec((token_block, tl), lambda i, j: (j, 0)),
             pl.BlockSpec((token_block, n_limbs), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((n_limbs, vocab_block), lambda i, j: (0, i)),

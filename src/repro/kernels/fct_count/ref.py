@@ -12,9 +12,9 @@ from repro.data.schema import PAD_ID
 def weighted_histogram(tokens: jnp.ndarray, weights: jnp.ndarray,
                        vocab: int) -> jnp.ndarray:
     """tokens [N, L] int32, weights [N] (int32/float32) -> [vocab]."""
-    n, l = tokens.shape
+    n, tl = tokens.shape
     flat = tokens.reshape(-1)
-    w = jnp.repeat(weights, l)
+    w = jnp.repeat(weights, tl)
     w = jnp.where(flat == PAD_ID, 0, w)
     hist = jnp.zeros((vocab,), weights.dtype).at[flat].add(w, mode="drop")
     return hist.at[PAD_ID].set(0)

@@ -8,7 +8,6 @@ attention.  Supports causal / local-window / full (encoder) masks and GQA.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional
 
@@ -73,7 +72,7 @@ def flash_attention(q, k, v, *, causal: bool = True,
         a0 = jnp.zeros((b, bq, hkv, g, dv), jnp.float32)
 
         def kv_step(carry, ki):
-            m, l, acc = carry
+            m, lse, acc = carry
             kblk, vblk = kb[:, ki], vb[:, ki]
             s = jnp.einsum("bqhgd,bkhd->bqhgk", qblk, kblk,
                            preferred_element_type=jnp.float32)
@@ -90,14 +89,14 @@ def flash_attention(q, k, v, *, causal: bool = True,
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + jnp.sum(p, axis=-1)
+            l_new = lse * corr + jnp.sum(p, axis=-1)
             acc_new = acc * corr[..., None] \
                 + jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(blk_dt), vblk,
                              preferred_element_type=jnp.float32)
             return (m_new, l_new, acc_new), None
 
-        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
-        return acc / jnp.maximum(l[..., None], 1e-30)
+        (m, lse, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        return acc / jnp.maximum(lse[..., None], 1e-30)
 
     if perf_enabled("seq_shard_attn"):
         # §Perf option: vmap (not loop) over q blocks and shard that axis on

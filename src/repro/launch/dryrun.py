@@ -13,7 +13,6 @@ Usage:
         --mesh single --out out.json
 """
 import argparse
-import dataclasses
 import json
 import sys
 import time

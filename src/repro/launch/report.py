@@ -2,12 +2,11 @@
 from __future__ import annotations
 
 import json
-import pathlib
 import sys
 
 
 def load(path="results/dryrun/all.jsonl"):
-    recs = [json.loads(l) for l in open(path)]
+    recs = [json.loads(line) for line in open(path)]
     seen = {}
     for r in recs:  # keep last per cell
         seen[(r["arch"], r["shape"], r["mesh"])] = r

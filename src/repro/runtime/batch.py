@@ -32,7 +32,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
-from repro.core.accum import AccumPolicy, INT32_CHECKED, INT64_EXACT
+from repro.core.accum import INT32_CHECKED, AccumPolicy
 from repro.core.plan import CNPlan, RelationRoute
 from repro.data.schema import PAD_ID
 

@@ -6,8 +6,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
-
 SCRIPT = textwrap.dedent("""
     import os, sys
     n_dev, phase, ckpt = sys.argv[1], sys.argv[2], sys.argv[3]
@@ -59,7 +57,7 @@ def _run(n_dev, phase, ckpt):
                           timeout=600,
                           cwd=os.path.dirname(os.path.dirname(__file__)))
     assert proc.returncode == 0, proc.stderr[-2000:]
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT")][0]
     return json.loads(line[len("RESULT"):])
 
 

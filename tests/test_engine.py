@@ -8,7 +8,7 @@ from repro.core.candidate_network import (TupleSets, enumerate_star_cns,
 from repro.core.fct import run_cn_plan, run_cn_plan_two_jobs, run_fct_query
 from repro.core.plan import build_cn_plan
 from repro.core.star import fct_star
-from repro.data.schema import (JoinEdge, PAD_ID, Relation, StarSchema,
+from repro.data.schema import (PAD_ID, JoinEdge, Relation, StarSchema,
                                tokens_histogram)
 from repro.data.tpch import (TpchConfig, generate, generate_customer,
                              plant_keywords, prejoin_orders_customer)

@@ -50,7 +50,7 @@ def dist_results():
                           capture_output=True, text=True, timeout=600,
                           cwd=os.path.dirname(os.path.dirname(__file__)))
     assert proc.returncode == 0, proc.stderr[-2000:]
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT")][0]
     return json.loads(line[len("RESULT"):])
 
 

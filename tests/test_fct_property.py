@@ -3,12 +3,11 @@ import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")  # optional dev dependency
-from hypothesis import given, settings, strategies as st
-
 import jax
 import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
 
-from repro.core.candidate_network import TupleSets, enumerate_star_cns, prune_empty_cns
+from repro.core.candidate_network import enumerate_star_cns
 from repro.core.fct import run_fct_query
 from repro.core.shares import closed_form_shares, optimize_shares, replication_cost
 from repro.core.star import fct_bruteforce, fct_star
@@ -123,17 +122,17 @@ def test_weighted_histogram_exact_across_precision_boundaries(data):
     """
     x64 = bool(jax.config.jax_enable_x64)
     n = data.draw(st.integers(1, 64))
-    l = data.draw(st.integers(1, 6))
+    tl = data.draw(st.integers(1, 6))
     vocab = data.draw(st.sampled_from([33, 64, 100, 512]))
     # magnitudes straddling each boundary; caps keep Σ w·l·n < 2^31 / 2^63
     if x64 and data.draw(st.booleans()):
-        wdtype, hi = jnp.int64, (1 << 52) // (n * l)
+        wdtype, hi = jnp.int64, (1 << 52) // (n * tl)
     else:
-        wdtype, hi = jnp.int32, (1 << 30) // (n * l)
+        wdtype, hi = jnp.int32, (1 << 30) // (n * tl)
     boundary = data.draw(st.sampled_from(
         [0, 1, (1 << 24) - 1, 1 << 24, (1 << 24) + 1, hi]))
     rng = np.random.default_rng(data.draw(st.integers(0, 10_000)))
-    toks = jnp.asarray(rng.integers(1, vocab, (n, l)), jnp.int32)
+    toks = jnp.asarray(rng.integers(1, vocab, (n, tl)), jnp.int32)
     w = np.minimum(rng.integers(0, max(boundary, 2), (n,)), hi)
     w = jnp.asarray(w).astype(wdtype)
     r = np.asarray(fct_ref.weighted_histogram(toks, w, vocab))

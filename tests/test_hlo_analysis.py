@@ -1,8 +1,7 @@
 """Trip-count-aware HLO analyzer: scan == unroll; collectives counted."""
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 

@@ -8,7 +8,6 @@ import pytest
 
 from repro.kernels.fct_count import ref as fct_ref
 from repro.kernels.fct_count.ops import weighted_histogram
-from repro.kernels.flash_attention import ref as flash_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.lru_scan import ref as lru_ref
 from repro.kernels.lru_scan.ops import lru_scan
@@ -18,12 +17,12 @@ RNG = np.random.default_rng(0)
 
 # --- fct_count ---------------------------------------------------------------
 
-@pytest.mark.parametrize("n,l,vocab", [
+@pytest.mark.parametrize("n,tl,vocab", [
     (128, 8, 512), (300, 5, 100), (1024, 16, 4096), (7, 3, 33), (1, 1, 2),
 ])
 @pytest.mark.parametrize("wdtype", [jnp.int32, jnp.float32])
-def test_fct_count_matches_ref(n, l, vocab, wdtype):
-    toks = jnp.asarray(RNG.integers(0, vocab, (n, l)), jnp.int32)
+def test_fct_count_matches_ref(n, tl, vocab, wdtype):
+    toks = jnp.asarray(RNG.integers(0, vocab, (n, tl)), jnp.int32)
     w = jnp.asarray(RNG.integers(0, 9, (n,))).astype(wdtype)
     r = fct_ref.weighted_histogram(toks, w, vocab)
     k = weighted_histogram(toks, w, vocab, backend="interpret")

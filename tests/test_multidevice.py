@@ -16,7 +16,6 @@ import subprocess
 import sys
 import textwrap
 
-import numpy as np
 import pytest
 
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -76,7 +75,7 @@ def _run(n_devices: int, x64: bool) -> dict:
         [sys.executable, "-c", SCRIPT, str(n_devices), "1" if x64 else "0"],
         env=env, capture_output=True, text=True, timeout=600, cwd=_REPO)
     assert proc.returncode == 0, proc.stderr[-3000:]
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT")][0]
     return json.loads(line[len("RESULT"):])
 
 

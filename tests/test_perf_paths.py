@@ -1,20 +1,19 @@
 """The §Perf optimization paths must be numerically equivalent to the
 baselines they replace (hillclimbs may not change semantics)."""
+import dataclasses
 import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import dataclasses
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs.base import get_arch
-from repro.distributed.perf_options import KNOWN, perf_options, enabled
+from repro.distributed.perf_options import enabled, perf_options
 from repro.models.rwkv6 import _wkv_chunked, _wkv_scan
 
 
@@ -107,7 +106,7 @@ def test_moe_shardmap_matches_gspmd_on_8_ranks():
                           capture_output=True, text=True, timeout=600,
                           cwd=os.path.dirname(os.path.dirname(__file__)))
     assert proc.returncode == 0, proc.stderr[-2000:]
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT")][0]
     rec = json.loads(line[len("RESULT"):])
     assert rec["err"] < 2e-4, rec
     assert abs(rec["aux_ref"] - rec["aux_sm"]) < 1e-4, rec

@@ -1,17 +1,16 @@
 """Fault tolerance: checkpoint/restart, failure injection, elastic restore,
 gradient compression, skew scheduler."""
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.configs.base import get_arch
 from repro.core.skew import lpt_schedule, round_robin_schedule
 from repro.distributed.checkpoint import (latest_step, restore_checkpoint,
                                           save_checkpoint)
-from repro.distributed.compression import (compressed_psum, init_error_state,
-                                           quantize_leaf, dequantize_leaf)
+from repro.distributed.compression import (compressed_psum, dequantize_leaf,
+                                           init_error_state, quantize_leaf)
 from repro.train.loop import LoopConfig, train
 
 

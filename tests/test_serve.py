@@ -9,7 +9,7 @@ import pytest
 from repro.api import FCTRequest, FCTSession, SessionConfig
 from repro.data.tpch import TpchConfig
 from repro.serve import (DynamicBatcher, FlushPool, Gateway, GatewayConfig,
-                         SchemaRegistry, ResultCache)
+                         ResultCache, SchemaRegistry)
 
 from test_engine import _crafted_schema
 

@@ -1,9 +1,7 @@
 """Sharding rules: spec trees mirror param/cache trees; divisibility fallback."""
+import jax
 import numpy as np
 import pytest
-
-import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ARCH_IDS, get_arch

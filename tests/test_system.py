@@ -1,11 +1,10 @@
 """End-to-end behaviour of the FCT system (paper Def. 6 semantics)."""
 import numpy as np
-import pytest
 
 from repro.core.fct import run_fct_query
 from repro.core.star import fct_bruteforce, fct_star, topk_terms
-from repro.data.tpch import TpchConfig, generate, plant_keywords
 from repro.data.schema import PAD_ID
+from repro.data.tpch import TpchConfig, generate, plant_keywords
 
 
 def small_schema(skew=0.0, seed=5):

@@ -6,9 +6,6 @@ import sys
 import textwrap
 
 import numpy as np
-import pytest
-
-import jax
 
 from repro.core.candidate_network import (TupleSets, enumerate_star_cns,
                                           prune_empty_cns)
@@ -85,7 +82,7 @@ def test_compressed_dp_training_tracks_exact_on_4_replicas():
                           cwd=os.path.dirname(os.path.dirname(__file__)))
     assert proc.returncode == 0, proc.stderr[-2000:]
     import json
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT")][0]
     rec = json.loads(line[len("RESULT"):])
     # both trained (loss below the ln(256)=5.55 init) and agree within noise
     assert rec["exact"] < 5.45, rec
