@@ -45,10 +45,25 @@ import numpy as np
 
 from benchmarks.common import emit, make_dataset
 from repro.api import FCTRequest
+from repro.obs import MetricsRegistry, write_chrome_trace
 from repro.serve import Gateway, GatewayConfig, SchemaRegistry
 
 WINDOW_MS = 1.0
 BURST_SIZES = (4, 8, 6)     # queries per tenant per burst (cycled)
+
+
+def _latency_summary(metrics: MetricsRegistry) -> dict:
+    """Per-tenant p50/p95/p99 (ms) from a phase-private gateway registry —
+    each measured gateway gets its OWN MetricsRegistry, so the histogram
+    holds exactly that phase's traffic (warmup replays included)."""
+    hists = metrics.snapshot()["histograms"]
+    out = {}
+    for key, h in hists.items():
+        if not key.startswith("gateway.query_latency_ms"):
+            continue
+        tenant = key.split("schema=")[-1].rstrip("}")
+        out[tenant] = {p: round(h[p], 3) for p in ("p50", "p95", "p99")}
+    return out
 
 
 def _request_pool(kws):
@@ -86,7 +101,7 @@ def _drain(futs):
     return [f.result(timeout=600) for f in futs]
 
 
-def run(quick: bool = False) -> None:
+def run(quick: bool = False, trace_out: str = None) -> None:
     n_bursts = 4 if quick else 12
     rng = np.random.default_rng(7)
     schema_a, kws_a = make_dataset(scale=0.4, query_type="star", seed=5)
@@ -102,8 +117,10 @@ def run(quick: bool = False) -> None:
 
     # two gateway configurations over ONE registry (shared sessions):
     # TTL 0 isolates dynamic batching; the second adds result caching
+    m_batched = MetricsRegistry()       # phase-private: clean percentiles
     gateway = Gateway(registry, GatewayConfig(
-        batch_window_ms=WINDOW_MS, result_cache_ttl_s=0, max_inflight=64))
+        batch_window_ms=WINDOW_MS, result_cache_ttl_s=0, max_inflight=64),
+        metrics=m_batched)
     sessions = {n: registry.session(n) for n in ("alpha", "beta")}
 
     # tenant isolation (acceptance c): private engines, partitioned budgets
@@ -159,6 +176,7 @@ def run(quick: bool = False) -> None:
     occupancy = {t: round(statistics.mean(r[t] for r in round_occupancy), 3)
                  for t in pools}
     mean_occupancy = statistics.mean(occupancy.values())
+    batched_latency = _latency_summary(m_batched)
     gateway.close()
     # CI-gate on the BEST round: occupancy under a 1ms window nominally sits
     # at burst size (~6), but a descheduled shared runner can split one
@@ -172,14 +190,16 @@ def run(quick: bool = False) -> None:
         f"{WINDOW_MS}ms window")
 
     # -- phase 3: gateway with a warm result cache --------------------------
+    m_cached = MetricsRegistry()
     gateway = Gateway(registry, GatewayConfig(
         batch_window_ms=WINDOW_MS, result_cache_ttl_s=3600.0,
-        max_inflight=64))
+        max_inflight=64), metrics=m_cached)
     for burst in bursts:                  # warm the cache (one miss each)
         _drain([gateway.submit(t, r) for t, r in burst])
     b0 = engine_batches()
     cached_us = float("inf")
     cached_hits = 0
+    kept_traces = []
     for _ in range(rounds):
         responses = []
         t0 = time.perf_counter()
@@ -188,6 +208,10 @@ def run(quick: bool = False) -> None:
         cached_us = min(cached_us, (time.perf_counter() - t0) * 1e6)
         assert all(r.cache_hit for r in responses), "cached replay missed"
         cached_hits += sum(r.cache_hit for r in responses)
+        if trace_out and len(kept_traces) < 256:
+            kept_traces.extend(r.trace for r in responses
+                               if r.trace is not None)
+    cached_latency = _latency_summary(m_cached)
     cached_dispatch_delta = engine_batches() - b0
     assert cached_dispatch_delta == 0, (
         f"result-cache hits dispatched {cached_dispatch_delta} device "
@@ -206,6 +230,10 @@ def run(quick: bool = False) -> None:
 
     gateway.close()
     registry.close()
+    if trace_out:
+        n_events = write_chrome_trace(trace_out, kept_traces[:256])
+        print(f"# trace -> {trace_out} ({min(len(kept_traces), 256)} "
+              f"requests, {n_events} events)")
 
     qps = {name: round(n_queries / (us / 1e6), 1) for name, us in
            [("sequential", seq_us), ("gateway_batched", batched_us),
@@ -228,7 +256,7 @@ def run(quick: bool = False) -> None:
          n_queries=n_queries, qps=qps["gateway_batched"],
          batch_occupancy=round(mean_occupancy, 3),
          occupancy_per_tenant=occupancy, dispatches=batched_dispatches,
-         window_ms=WINDOW_MS,
+         window_ms=WINDOW_MS, latency_ms=batched_latency,
          speedup=round(per_q["sequential"] / per_q["gateway_batched"], 2))
     emit(f"fct_serving_gateway_cached/2tenants/{n_queries}q",
          per_q["gateway_cached"],
@@ -237,6 +265,7 @@ def run(quick: bool = False) -> None:
          kind="serving_load", strategy="gateway_cached",
          n_queries=n_queries, qps=qps["gateway_cached"],
          hit_rate=hit_rate, engine_dispatch_delta=cached_dispatch_delta,
+         latency_ms=cached_latency,
          speedup=round(per_q["sequential"] / per_q["gateway_cached"], 2))
 
 
@@ -267,8 +296,11 @@ if __name__ == "__main__":
                     help="CI mode: fewer bursts, same assertions")
     ap.add_argument("--no-json", action="store_true",
                     help="skip merging records into BENCH_fct.json")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the cached phase's span trees as Chrome "
+                         "trace-event JSON")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(quick=args.quick)
+    run(quick=args.quick, trace_out=args.trace_out)
     if not args.no_json:
         _merge_into_bench_json()

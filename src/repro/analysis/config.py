@@ -55,6 +55,11 @@ THREADED_MODULES = {
     "runtime/store.py": ("_lock",),
     "runtime/cache.py": ("_lock",),
     "runtime/engine.py": ("_stats_lock",),
+    # the metrics registry is the blessed lock owner for counter state:
+    # every instrument bumps under the registry's single ``_lock`` (shared
+    # via ``self._lock``), so components route shared counters through
+    # repro.obs instead of growing new raw ``self.x += 1`` sites
+    "obs/metrics.py": ("_lock",),
 }
 
 #: constructor-like functions where unlocked writes are fine (the object

@@ -57,9 +57,14 @@ class FCTResponse:
     ``terms`` are the decoded top-k strings (``"<id>"`` placeholders when the
     session has no tokenizer); ``term_ids``/``freqs`` are the raw Def. 6
     result and ``all_freqs`` the full frequency vector the top-k was drawn
-    from.  ``timings`` has ``plan_ms`` (host-side: tuple sets, CN
-    enumeration, routing plans), ``execute_ms`` (device dispatch + transfer +
-    top-k) and ``total_ms``.  ``engine_stats`` is the *delta* of the engine
+    from.  ``timings`` reports every serving phase separately — ``plan_ms``
+    (host-side: tuple sets, CN enumeration, routing plans), ``dispatch_ms``
+    (async device enqueue incl. store uploads), ``collect_ms`` (device
+    compute + histogram transfer), ``finalize_ms`` (top-k slice + term
+    decode) — plus ``execute_ms`` (= dispatch + collect + finalize) and
+    ``total_ms`` (= plan + execute).  The same keys appear on the sync,
+    batched, pipelined and gateway cache-hit paths (a hit reports zero
+    plan/dispatch/collect).  ``engine_stats`` is the *delta* of the engine
     counters attributable to this query (for ``query_batch``, to the whole
     batch — the dispatch is shared); ``cold`` is True iff that delta includes
     at least one retrace.  ``cache_hit`` marks responses the serving
@@ -68,6 +73,11 @@ class FCTResponse:
     ``coalesced`` marks responses that attached to an identical in-flight
     query instead of dispatching their own (same zero-engine-cost re-slice,
     but the histogram came from the leader request, not the cache).
+
+    ``trace`` is the request's :class:`repro.obs.Trace` — the recorded span
+    tree (plan/dispatch/collect/finalize, plus store-upload / cache-lookup /
+    batcher spans where they apply); ``trace.records()`` gives structured
+    dicts, ``repro.obs.chrome_trace([...])`` a Chrome trace_event document.
 
     ``accum_policy`` names the device-accumulation precision the histogram
     carries (:class:`repro.core.accum.AccumPolicy`): ``"int32-checked"`` —
@@ -90,6 +100,7 @@ class FCTResponse:
     engine_stats: Dict[str, int]
     cold: bool
     request: Optional[FCTRequest] = None
+    trace: Optional[object] = None       # repro.obs.Trace (span tree)
     cache_hit: bool = False
     coalesced: bool = False
     accum_policy: str = "int32-checked"

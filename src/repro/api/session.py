@@ -44,6 +44,8 @@ from repro.core.candidate_network import (StarCN, TupleSets,
 from repro.core.plan import CNPlan, build_cn_plan
 from repro.core.star import topk_terms
 from repro.data.schema import PAD_ID, StarSchema, tokens_histogram
+from repro.obs import Trace, default_registry, maybe_activate
+from repro.obs import span as obs_span
 from repro.runtime.cache import LruDict
 from repro.runtime.store import RelationStore
 
@@ -97,6 +99,9 @@ class _PlannedQuery:
     imbalance: float
     row_imbalance: float
     plan_ms: float
+    trace: Optional[Trace] = None       # per-request span tree; None while
+    #                                     the artifact sits in the plan cache
+    #                                     (each hit re-binds its own trace)
 
 
 @dataclasses.dataclass
@@ -128,10 +133,14 @@ class FCTSession:
 
     def __init__(self, schema: StarSchema, *, tokenizer=None, engine=None,
                  mesh=None, config: Optional[SessionConfig] = None,
-                 stop_mask: Optional[np.ndarray] = None) -> None:
+                 stop_mask: Optional[np.ndarray] = None,
+                 metrics=None) -> None:
         self.schema = schema
         self.tokenizer = tokenizer
         self.config = config if config is not None else SessionConfig()
+        # the metrics registry (or a labeled per-tenant facade from the
+        # gateway) every session-owned component registers into
+        self.metrics = metrics if metrics is not None else default_registry()
         # resolved once: every dispatch of this session accumulates under
         # one policy, so the response-level precision advertisement is stable
         self.accum_policy = AccumPolicy.resolve(self.config.accum_policy)
@@ -145,7 +154,8 @@ class FCTSession:
             from repro.runtime.engine import FCTEngine, default_engine
             if self.config.cache_max_entries is not None:
                 engine = FCTEngine(cache=ExecutableCache(
-                    max_entries=self.config.cache_max_entries))
+                    max_entries=self.config.cache_max_entries,
+                    metrics=self.metrics), metrics=self.metrics)
             else:
                 engine = default_engine()
         elif self.config.cache_max_entries is not None:
@@ -157,7 +167,8 @@ class FCTSession:
         # device-resident tuple-set columns: uploaded once per (session,
         # tuple set), referenced by every dispatch; dropped by invalidate()
         self.store = RelationStore(self.mesh,
-                                   max_bytes=self.config.store_max_bytes)
+                                   max_bytes=self.config.store_max_bytes,
+                                   metrics=self.metrics)
         if stop_mask is None and tokenizer is not None:
             stop_mask = tokenizer.stop_mask()
         self.stop_mask = stop_mask
@@ -174,11 +185,32 @@ class FCTSession:
         self._engine_lock = threading.Lock()  # sync query() vs pipeline
         self._pipeline_lock = threading.Lock()  # lazy init vs close()
         self._pipeline: Optional[QueryPipeline] = None
-        self.queries_served = 0
-        self.ts_hits = 0
-        self.ts_misses = 0
-        self.plan_hits = 0
-        self.plan_misses = 0
+        self._c_queries = self.metrics.counter("session.queries_served")
+        self._c_ts_hits = self.metrics.counter("session.tuple_set_hits")
+        self._c_ts_misses = self.metrics.counter("session.tuple_set_misses")
+        self._c_plan_hits = self.metrics.counter("session.plan_hits")
+        self._c_plan_misses = self.metrics.counter("session.plan_misses")
+
+    # legacy attribute views over the registry-owned counters
+    @property
+    def queries_served(self) -> int:
+        return self._c_queries.value
+
+    @property
+    def ts_hits(self) -> int:
+        return self._c_ts_hits.value
+
+    @property
+    def ts_misses(self) -> int:
+        return self._c_ts_misses.value
+
+    @property
+    def plan_hits(self) -> int:
+        return self._c_plan_hits.value
+
+    @property
+    def plan_misses(self) -> int:
+        return self._c_plan_misses.value
 
     # -- keyword / cache plumbing -------------------------------------------
 
@@ -200,12 +232,12 @@ class FCTSession:
         with self._plan_lock:
             ts = self._tuple_sets.hit(keywords)
             if ts is not None:
-                self.ts_hits += 1
+                self._c_ts_hits.inc()
                 return ts
             epoch = self._data_epoch
         ts = TupleSets.build(self.schema, keywords)  # outside the lock
+        self._c_ts_misses.inc()
         with self._plan_lock:
-            self.ts_misses += 1
             if self._data_epoch != epoch:  # invalidated mid-build: serve,
                 return ts                  # but cache nothing stale
             return self._tuple_sets.put(keywords, ts)
@@ -222,36 +254,50 @@ class FCTSession:
 
     # -- planning / execution stages ----------------------------------------
 
-    def _plan(self, req: FCTRequest) -> _PlannedQuery:
+    def _plan(self, req: FCTRequest,
+              trace: Optional[Trace] = None) -> _PlannedQuery:
         """Host side of one query: tuple sets, CN pruning, routing plans and
         the map-only histogram of single-relation CNs.
+
+        Every request gets its obs :class:`Trace` here (unless the caller —
+        the gateway — started one at its edge and passed it in); the
+        ``plan`` span covers this whole stage and the finished trace rides
+        the response.
 
         Planned queries are memoized per (keywords, planning knobs) — the
         serving workload repeats requests, and replanning is pure recompute.
         ``top_k`` is excluded from the key (it only affects the final
-        selection), so a cache hit is re-bound to the incoming request.
+        selection), so a cache hit is re-bound to the incoming request (and
+        to its own trace: artifacts are cached trace-less).
         """
+        if trace is None:
+            trace = Trace()
         t0 = time.perf_counter()
-        kws = self.resolve_keywords(req.keywords)
-        if self.config.plan_cache_size <= 0:
-            return self._plan_resolved(req, kws, t0)
-        key = (kws, req.r_max, req.mode, req.rho, req.sample_frac, req.salt)
-        with self._plan_lock:
-            cached = self._plan_cache.hit(key)
+        with trace.activate(), obs_span(
+                "plan", n_keywords=len(req.keywords)) as sp:
+            kws = self.resolve_keywords(req.keywords)
+            if self.config.plan_cache_size <= 0:
+                sp.args["plan_cached"] = False
+                return dataclasses.replace(
+                    self._plan_resolved(req, kws, t0), trace=trace)
+            key = (kws, req.r_max, req.mode, req.rho, req.sample_frac,
+                   req.salt)
+            with self._plan_lock:
+                cached = self._plan_cache.hit(key)
+                if cached is None:
+                    epoch = self._data_epoch
+            sp.args["plan_cached"] = cached is not None
             if cached is not None:
-                self.plan_hits += 1
-            else:
-                self.plan_misses += 1
-                epoch = self._data_epoch
-        if cached is not None:
-            return dataclasses.replace(
-                cached, request=req,
-                plan_ms=(time.perf_counter() - t0) * 1e3)
-        planned = self._plan_resolved(req, kws, t0)
-        with self._plan_lock:
-            if self._data_epoch == epoch:  # else invalidated mid-planning
-                self._plan_cache.put(key, planned)
-        return planned
+                self._c_plan_hits.inc()
+                return dataclasses.replace(
+                    cached, request=req, trace=trace,
+                    plan_ms=(time.perf_counter() - t0) * 1e3)
+            self._c_plan_misses.inc()
+            planned = self._plan_resolved(req, kws, t0)
+            with self._plan_lock:
+                if self._data_epoch == epoch:  # else invalidated mid-planning
+                    self._plan_cache.put(key, planned)
+            return dataclasses.replace(planned, trace=trace)
 
     def _plan_resolved(self, req: FCTRequest, kws: Tuple[int, ...],
                        t0: float) -> _PlannedQuery:
@@ -310,7 +356,9 @@ class FCTSession:
 
     def _finish(self, planned: _PlannedQuery, freq: np.ndarray,
                 engine_stats: Dict[str, int], plan_ms: float,
-                execute_ms: float) -> FCTResponse:
+                dispatch_ms: float, collect_ms: float) -> FCTResponse:
+        t0 = time.perf_counter()
+        t0_ns = time.perf_counter_ns()
         req = planned.request
         freq[PAD_ID] = 0
         ids, f = topk_terms(freq, planned.keywords, req.top_k, self.stop_mask)
@@ -319,9 +367,14 @@ class FCTSession:
         else:
             terms = [f"<{int(t)}>" for t in ids]
         # _finish runs on finalizer, flush-pool and sync-caller threads
-        # concurrently — the bump must not lose updates
-        with self._plan_lock:
-            self.queries_served += 1
+        # concurrently — the registry-owned counter never loses updates
+        self._c_queries.inc()
+        finalize_ms = (time.perf_counter() - t0) * 1e3
+        if planned.trace is not None:
+            planned.trace.add_span("finalize", t0_ns,
+                                   time.perf_counter_ns() - t0_ns,
+                                   top_k=req.top_k)
+        execute_ms = dispatch_ms + collect_ms + finalize_ms
         return FCTResponse(
             terms=terms, term_ids=ids, freqs=f, all_freqs=freq,
             n_cns=planned.n_cns, n_joined_cns=len(planned.plans),
@@ -330,12 +383,15 @@ class FCTSession:
             imbalance=planned.imbalance,
             row_imbalance=planned.row_imbalance,
             timings={"plan_ms": round(plan_ms, 3),
+                     "dispatch_ms": round(dispatch_ms, 3),
+                     "collect_ms": round(collect_ms, 3),
+                     "finalize_ms": round(finalize_ms, 3),
                      "execute_ms": round(execute_ms, 3),
                      "total_ms": round(plan_ms + execute_ms, 3)},
             engine_stats=engine_stats,
             cold=engine_stats.get("traces", 0) > 0,
             accum_policy=self.accum_policy.name,
-            request=req)
+            request=req, trace=planned.trace)
 
     def _dispatch_planned(self, planned: Sequence[_PlannedQuery]) -> _InFlight:
         """Enqueue the device work of one or more planned queries (async).
@@ -355,6 +411,7 @@ class FCTSession:
             owners.extend([qi] * len(p.plans))
             all_plans.extend(p.plans)
         t0 = time.perf_counter()
+        t0_ns = time.perf_counter_ns()
         with self._engine_lock:
             before = self._engine_snapshot()
             pending = None
@@ -363,13 +420,22 @@ class FCTSession:
                 # store: the first dispatch over a tuple set uploads its
                 # columns, every later one — warm repeats, pipelined
                 # submits, multi-query batches of ANY composition — ships
-                # only send tables and key-column indices
-                pending = self.engine.dispatch_plans(
-                    all_plans, self.mesh, self.config.histogram_backend,
-                    individual=individual, store=self.store,
-                    accum=self.accum_policy)
+                # only send tables and key-column indices.  Engine / store
+                # spans (dispatch_group, store.upload) land on the batch
+                # leader's trace.
+                with maybe_activate(planned[0].trace):
+                    pending = self.engine.dispatch_plans(
+                        all_plans, self.mesh, self.config.histogram_backend,
+                        individual=individual, store=self.store,
+                        accum=self.accum_policy)
             delta = self._engine_delta(before)
         dispatch_ms = (time.perf_counter() - t0) * 1e3
+        dur_ns = time.perf_counter_ns() - t0_ns
+        n_groups = len(pending) if pending is not None else 0
+        for p in planned:
+            if p.trace is not None:
+                p.trace.add_span("dispatch", t0_ns, dur_ns,
+                                 n_groups=n_groups, shared=individual)
         return _InFlight(planned=planned, owners=np.asarray(owners, np.int64),
                          pending=pending, individual=individual,
                          n_plans=len(all_plans), engine_delta=delta,
@@ -378,6 +444,7 @@ class FCTSession:
     def _finalize(self, flight: _InFlight) -> List[FCTResponse]:
         """Block on the device results and build the responses."""
         t0 = time.perf_counter()
+        t0_ns = time.perf_counter_ns()
         vocab = self.schema.vocab_size
         per_plan = total = None
         if flight.pending is not None:
@@ -386,7 +453,12 @@ class FCTSession:
                     flight.pending, flight.n_plans, vocab)
             else:
                 total = self.engine.collect_total(flight.pending, vocab)
-        execute_ms = flight.dispatch_ms + (time.perf_counter() - t0) * 1e3
+        collect_ms = (time.perf_counter() - t0) * 1e3
+        dur_ns = time.perf_counter_ns() - t0_ns
+        for p in flight.planned:
+            if p.trace is not None:
+                p.trace.add_span("collect", t0_ns, dur_ns,
+                                 shared=flight.individual)
         out = []
         for qi, p in enumerate(flight.planned):
             if p.plans:
@@ -397,7 +469,8 @@ class FCTSession:
             else:  # copy: host_freq may be shared via the plan cache
                 freq = p.host_freq.copy()
             out.append(self._finish(p, freq, flight.engine_delta,
-                                    p.plan_ms, execute_ms))
+                                    p.plan_ms, flight.dispatch_ms,
+                                    collect_ms))
         return out
 
     def _execute(self, planned: _PlannedQuery) -> FCTResponse:
@@ -417,16 +490,24 @@ class FCTSession:
         """Synchronous single-query path."""
         return self._execute(self._plan(req))
 
-    def query_batch(self, reqs: Sequence[FCTRequest]) -> List[FCTResponse]:
+    def query_batch(self, reqs: Sequence[FCTRequest],
+                    traces: Optional[Sequence[Optional[Trace]]] = None
+                    ) -> List[FCTResponse]:
         """Answer several requests through shared device dispatches.
 
         With mixed workloads this issues strictly fewer device dispatches
         than N ``query()`` calls whenever any two requests share a plan
-        shape signature.
+        shape signature.  ``traces`` (same length as ``reqs``) lets a caller
+        that already opened a per-request trace — the batcher records queue
+        wait on it — continue it through the session stages; ``None``
+        entries get a fresh trace as usual.
         """
         if not reqs:
             return []
-        return self._execute_planned([self._plan(r) for r in reqs])
+        if traces is None:
+            traces = [None] * len(reqs)
+        return self._execute_planned(
+            [self._plan(r, trace=t) for r, t in zip(reqs, traces)])
 
     def submit(self, req: FCTRequest) -> Future:
         """Asynchronous path: enqueue on the planning/dispatch pipeline.
@@ -494,13 +575,17 @@ class FCTSession:
         counters."""
         out = dict(self.engine.stats())
         out.update(self.store.stats())
-        out.update(queries_served=self.queries_served,
+        served, ts_hits, ts_misses, plan_hits, plan_misses = \
+            self.metrics.values(self._c_queries, self._c_ts_hits,
+                                self._c_ts_misses, self._c_plan_hits,
+                                self._c_plan_misses)
+        out.update(queries_served=served,
                    tuple_set_entries=len(self._tuple_sets),
-                   tuple_set_hits=self.ts_hits,
-                   tuple_set_misses=self.ts_misses,
+                   tuple_set_hits=ts_hits,
+                   tuple_set_misses=ts_misses,
                    plan_entries=len(self._plan_cache),
-                   plan_hits=self.plan_hits,
-                   plan_misses=self.plan_misses,
+                   plan_hits=plan_hits,
+                   plan_misses=plan_misses,
                    accum_policy=self.accum_policy.name,
                    n_devices=self._n_dev,
                    mesh_shape={a: int(self.mesh.shape[a])

@@ -29,23 +29,32 @@ def main():
     ap.add_argument("--repeat", type=int, default=1,
                     help="run the query N times (warm runs hit the "
                          "compiled-executable cache)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write every rep's span tree as Chrome trace-event "
+                         "JSON (chrome://tracing / Perfetto)")
     args = ap.parse_args()
 
     from examples.quickstart import TOK, build_db
     from repro.api import FCTRequest, FCTSession
+    from repro.obs import write_chrome_trace
 
     schema = build_db(n_fact=int(2000 * args.scale))
     session = FCTSession(schema, tokenizer=TOK)  # process-wide engine
     req = FCTRequest(keywords=tuple(args.keywords), top_k=args.top_k,
                      r_max=args.r_max, mode=args.mode, rho=args.rho,
                      sample_frac=args.sample_frac)
-    res = None
+    res, traces = None, []
     for rep in range(max(1, args.repeat)):
         t0 = time.perf_counter()
         res = session.query(req)
         ms = (time.perf_counter() - t0) * 1e3
+        traces.append(res.trace)
         label = "cold" if res.cold else "warm"  # from the engine trace delta
+        t = res.timings
         print(f"run {rep} ({label}): {ms:.1f}ms "
+              f"(plan {t['plan_ms']:.1f} dispatch {t['dispatch_ms']:.1f} "
+              f"collect {t['collect_ms']:.1f} "
+              f"finalize {t['finalize_ms']:.1f}) "
               f"traces={res.engine_stats['traces']}")
     print(f"query={args.keywords} mode={args.mode} "
           f"CNs={res.n_cns} (joined {res.n_joined_cns}) "
@@ -59,6 +68,10 @@ def main():
           f"plan cache {st['plan_hits']} hits")
     for word, freq in res.topk():
         print(f"  {word:16s} {freq}")
+    if args.trace_out:
+        n_events = write_chrome_trace(args.trace_out, traces)
+        print(f"trace -> {args.trace_out} ({len(traces)} reps, "
+              f"{n_events} events)")
 
 
 if __name__ == "__main__":

@@ -23,10 +23,19 @@ first query).  Address a tenant with a ``schema:`` prefix:
 
     # self-checking multi-schema smoke run (used by CI)
     PYTHONPATH=src python -m repro.launch.fct_serve --smoke
+
+Observability (repro/obs): ``--metrics-out`` streams periodic JSON-lines
+snapshots of the process metrics registry (per-tenant latency histograms,
+cache hit counters, shuffle bytes — see repro/obs/README.md),
+``--trace-out`` writes the served queries' span trees as a Chrome
+trace-event file (load in chrome://tracing or Perfetto), and the stdin
+lines ``stats`` / ``metrics`` print the gateway stats dict / a registry
+snapshot instead of being parsed as queries.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -84,11 +93,21 @@ def main() -> None:
     ap.add_argument("--max-inflight", type=int, default=32,
                     help="gateway backpressure: max uncached requests in "
                          "flight before submit() blocks")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write served queries' span trees as Chrome "
+                         "trace-event JSON (first %d traced requests)"
+                         % 1024)
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="stream periodic JSON-lines metrics snapshots "
+                         "(one line per interval + one final line)")
+    ap.add_argument("--metrics-interval", type=float, default=10.0,
+                    metavar="S", help="seconds between --metrics-out lines")
     args = ap.parse_args()
 
     from examples.quickstart import TOK, build_db
     from repro.api import FCTRequest
     from repro.data.tpch import TpchConfig
+    from repro.obs import JsonLinesReporter, write_chrome_trace
     from repro.serve import Gateway, GatewayConfig, SchemaRegistry
 
     t0 = time.perf_counter()
@@ -118,6 +137,11 @@ def main() -> None:
           f"tenants {registry.names()} (default {DEFAULT_SCHEMA!r}), "
           f"window {window_ms}ms, result TTL {result_ttl}s, "
           f"max in-flight {args.max_inflight}", flush=True)
+
+    reporter = (JsonLinesReporter(gateway.metrics, args.metrics_out,
+                                  interval_s=args.metrics_interval)
+                if args.metrics_out else None)
+    kept_traces = []                    # first N served traces, for export
 
     def make_request(words):
         return FCTRequest(keywords=tuple(words), top_k=args.top_k,
@@ -149,12 +173,22 @@ def main() -> None:
                 print(f"[{idx}] {schema}: {line!r}: failed ({e})", flush=True)
                 return
             report(idx, schema, line, resp, (time.perf_counter() - t1) * 1e3)
+            if resp.trace is not None and len(kept_traces) < 1024:
+                kept_traces.append(resp.trace)
             if out is not None:
                 out.append(resp)
 
         for line in lines:
             line = line.strip()
             if not line or line.startswith("#"):
+                continue
+            if line == "stats":          # introspection command, not a query
+                print(json.dumps(gateway.stats(), indent=2, sort_keys=True,
+                                 default=str), flush=True)
+                continue
+            if line == "metrics":
+                print(json.dumps(gateway.metrics.snapshot(), indent=2,
+                                 sort_keys=True, default=str), flush=True)
                 continue
             schema, words = parse_line(line, DEFAULT_SCHEMA,
                                        registry.names())
@@ -221,9 +255,52 @@ def main() -> None:
         r = gateway.query("demo", make_request(["alps", "bordeaux"]))
         assert not r.cache_hit, "invalidated entry still served"
 
+        # -- observability self-check (the ISSUE's acceptance gate) --------
+        # per-tenant metrics snapshot: latency histogram with ordered
+        # percentiles, result-cache hit rate, engine shuffle volume
+        snap = gateway.metrics.snapshot()
+        counters, hists = snap["counters"], snap["histograms"]
+        for tenant in ("demo", "tpch"):
+            lat = hists.get("gateway.query_latency_ms{schema=%s}" % tenant)
+            assert lat and lat["count"] > 0, \
+                f"no latency samples for {tenant}: {sorted(hists)}"
+            assert lat["p50"] <= lat["p95"] <= lat["p99"], lat
+            assert "engine.bytes_shipped{schema=%s}" % tenant in counters, \
+                f"no engine instruments labeled for {tenant}"
+        # the demo tenant's queries join CNs, so device dispatches shipped
+        # send tables (tpch's canned keywords legitimately join nothing)
+        assert counters["engine.bytes_shipped{schema=demo}"] > 0, \
+            "no shuffle bytes attributed to demo"
+        hits = counters["result_cache.hits{schema=demo}"]
+        misses = counters["result_cache.misses{schema=demo}"]
+        assert hits > 0 and hits / (hits + misses) > 0.2, \
+            f"result-cache hit rate implausibly low: {hits}h/{misses}m"
+        # span coverage: engine-executed responses carry the full stage
+        # tree; cache hits record the gateway-edge lookup + re-slice
+        for resp in first + second:
+            names = set(resp.trace.span_names())
+            if resp.cache_hit or resp.coalesced:
+                assert {"cache.lookup", "finalize"} <= names, names
+            else:
+                assert {"plan", "dispatch", "collect", "finalize",
+                        "cache.lookup", "batcher.window"} <= names, names
+        assert all(set(r.timings) == {
+            "plan_ms", "dispatch_ms", "collect_ms", "finalize_ms",
+            "execute_ms", "total_ms"} for r in first + second), \
+            "timings keys drifted"
+        print("# obs self-check: per-tenant histograms, hit rates and span "
+              "coverage OK", flush=True)
+
     st = gateway.stats()
     gateway.close()
     registry.close()
+    if reporter is not None:
+        reporter.close()                # writes one final snapshot line
+        print(f"# metrics -> {args.metrics_out}", flush=True)
+    if args.trace_out:
+        n_events = write_chrome_trace(args.trace_out, kept_traces)
+        print(f"# trace -> {args.trace_out} ({len(kept_traces)} requests, "
+              f"{n_events} events)", flush=True)
     for name in registry.names():
         if name not in st:
             continue

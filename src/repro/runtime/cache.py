@@ -27,6 +27,8 @@ from typing import Any, Callable, Dict, Hashable, Optional
 
 import jax
 
+from repro.obs import default_registry
+
 
 class LruDict(OrderedDict):
     """OrderedDict with LRU semantics and an optional size bound.
@@ -66,14 +68,16 @@ class ExecutableCache:
     """Hashable-key -> jitted callable, with LRU eviction and hit/miss/
     trace/eviction counters."""
 
-    def __init__(self, max_entries: Optional[int] = None) -> None:
+    def __init__(self, max_entries: Optional[int] = None,
+                 metrics=None) -> None:
         if max_entries is not None and max_entries < 1:
             raise ValueError(f"max_entries must be >= 1, got {max_entries}")
         self._fns = LruDict(max_entries)
         self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
-        self.traces = 0
+        self.metrics = metrics if metrics is not None else default_registry()
+        self._c_hits = self.metrics.counter("executable_cache.hits")
+        self._c_misses = self.metrics.counter("executable_cache.misses")
+        self._c_traces = self.metrics.counter("executable_cache.traces")
 
     @property
     def max_entries(self) -> Optional[int]:
@@ -82,6 +86,21 @@ class ExecutableCache:
     @property
     def evictions(self) -> int:
         return self._fns.evictions
+
+    # legacy attribute views: the counters now live in the metrics registry
+    # (registry lock = the consistent-read owner), these read-only ints keep
+    # every existing caller and test working
+    @property
+    def hits(self) -> int:
+        return self._c_hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._c_misses.value
+
+    @property
+    def traces(self) -> int:
+        return self._c_traces.value
 
     def get_or_build(self, key: Hashable, builder: Callable[[], Callable]):
         """Return the cached executable for ``key``, building (and jitting)
@@ -95,15 +114,14 @@ class ExecutableCache:
         """
         with self._lock:
             fn = self._fns.hit(key)
-            if fn is not None:
-                self.hits += 1
-                return fn
-            self.misses += 1
+        if fn is not None:
+            self._c_hits.inc()
+            return fn
+        self._c_misses.inc()
         inner = builder()
 
         def traced(*args: Any):
-            with self._lock:  # runs only under tracing, not per call
-                self.traces += 1
+            self._c_traces.inc()  # runs only under tracing, not per call
             return inner(*args)
 
         with self._lock:
@@ -119,13 +137,18 @@ class ExecutableCache:
         with self._lock:
             self._fns.clear()
             self._fns.evictions = 0
-            self.hits = self.misses = self.traces = 0
+        self._c_hits.reset()
+        self._c_misses.reset()
+        self._c_traces.reset()
 
     def stats(self) -> Dict[str, int]:
+        # one registry-lock cut for the counters, then the LRU bookkeeping
+        # under its own lock — each group internally consistent
+        hits, misses, traces = self.metrics.values(
+            self._c_hits, self._c_misses, self._c_traces)
         with self._lock:
-            return {"entries": len(self), "hits": self.hits,
-                    "misses": self.misses, "traces": self.traces,
-                    "evictions": self.evictions}
+            return {"entries": len(self), "hits": hits, "misses": misses,
+                    "traces": traces, "evictions": self.evictions}
 
 
 _GLOBAL_CACHE = ExecutableCache()

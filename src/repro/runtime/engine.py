@@ -47,7 +47,6 @@ is retired along with the forced int64 ref fallback).
 """
 from __future__ import annotations
 
-import threading
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -59,6 +58,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.accum import AccumPolicy
 from repro.core.plan import CNPlan
+from repro.obs import default_registry
+from repro.obs import span as obs_span
 from repro.runtime.batch import (PlanSignature, group_plan_indices,
                                  pad_cn_axis, plan_signature, stack_group,
                                  x64_flag)
@@ -149,8 +150,9 @@ def _build_batched_fn(sig: PlanSignature, mesh: Mesh, histogram_backend: str,
     def device_fn(fact, dims):
         fact = {k: jnp.squeeze(v, 1) for k, v in fact.items()}
         dims = [{k: jnp.squeeze(v, 1) for k, v in d.items()} for d in dims]
-        return _vmapped_cns(fact, dims, sig, histogram_backend, reduce_cns,
-                            reduce_scatter)
+        with jax.named_scope("fct.group_batched"):
+            return _vmapped_cns(fact, dims, sig, histogram_backend,
+                                reduce_cns, reduce_scatter)
 
     return shard_map(device_fn, mesh=mesh, in_specs=(spec, [spec] * sig.m),
                      out_specs=_out_spec(reduce_cns, reduce_scatter),
@@ -188,8 +190,10 @@ def _build_store_fn(sig: PlanSignature, mesh: Mesh, histogram_backend: str,
                 out["cols"] = rel["cols"]
             return out
 
-        return _vmapped_cns(stack(fact), [stack(d) for d in dims], sig,
-                            histogram_backend, reduce_cns, reduce_scatter)
+        with jax.named_scope("fct.group_store"):
+            return _vmapped_cns(stack(fact), [stack(d) for d in dims], sig,
+                                histogram_backend, reduce_cns,
+                                reduce_scatter)
 
     return shard_map(device_fn, mesh=mesh,
                      in_specs=(fact_spec, [rel_spec] * sig.m),
@@ -221,18 +225,37 @@ class FCTEngine:
 
     def __init__(self, cache: Optional[ExecutableCache] = None,
                  batch: bool = True, bucket: bool = True,
-                 reduce_scatter: bool = True) -> None:
-        self.cache = cache if cache is not None else ExecutableCache()
+                 reduce_scatter: bool = True, metrics=None) -> None:
+        self.metrics = metrics if metrics is not None else default_registry()
+        self.cache = cache if cache is not None else ExecutableCache(
+            metrics=self.metrics)
         self.batch = batch
         self.bucket = bucket
         self.reduce_scatter = reduce_scatter
         # the default engine is shared process-wide (sessions, serving
-        # tenants, sync callers), so its traffic counters are guarded
-        self._stats_lock = threading.Lock()
-        self.batches_run = 0
-        self.cns_run = 0
-        self.bytes_shipped = 0
-        self.column_bytes_shipped = 0
+        # tenants, sync callers); the registry lock guards the counters
+        self._c_batches = self.metrics.counter("engine.batches_run")
+        self._c_cns = self.metrics.counter("engine.cns_run")
+        self._c_bytes = self.metrics.counter("engine.bytes_shipped")
+        self._c_column_bytes = self.metrics.counter(
+            "engine.column_bytes_shipped")
+
+    # legacy attribute views over the registry-owned counters
+    @property
+    def batches_run(self) -> int:
+        return self._c_batches.value
+
+    @property
+    def cns_run(self) -> int:
+        return self._c_cns.value
+
+    @property
+    def bytes_shipped(self) -> int:
+        return self._c_bytes.value
+
+    @property
+    def column_bytes_shipped(self) -> int:
+        return self._c_column_bytes.value
 
     def _group(self, plans: Sequence[CNPlan],
                accum: Optional[AccumPolicy] = None
@@ -246,6 +269,23 @@ class FCTEngine:
     def _dispatch(self, sig: PlanSignature, group: Sequence[CNPlan],
                   mesh: Mesh, histogram_backend: str, reduce_cns: bool,
                   store=None):
+        """Span/profiler shell around :meth:`_dispatch_group`: one
+        ``engine.dispatch_group`` span per launch on the active trace, and a
+        ``jax.profiler.TraceAnnotation`` so device profiles line host spans
+        up with XLA activity."""
+        path = "store" if store is not None else "host"
+        family = "sum" if reduce_cns else "percn"
+        with obs_span("engine.dispatch_group", n_cns=len(group), path=path,
+                      family=family, n_devices=sig.n_devices):
+            with jax.profiler.TraceAnnotation(
+                    f"fct.dispatch_group:{path}.{family}"):
+                return self._dispatch_group(sig, group, mesh,
+                                            histogram_backend, reduce_cns,
+                                            store)
+
+    def _dispatch_group(self, sig: PlanSignature, group: Sequence[CNPlan],
+                        mesh: Mesh, histogram_backend: str, reduce_cns: bool,
+                        store=None):
         """Enqueue one stacked group on the device; returns the LAZY result
         (jax async dispatch) — callers block via ``_collect``.
 
@@ -284,8 +324,7 @@ class FCTEngine:
                                              n_stack,
                                              reduce_cns=reduce_cns,
                                              reduce_scatter=rs))
-            with self._stats_lock:
-                self.bytes_shipped += shipped
+            self._c_bytes.inc(shipped)
         else:
             fact, dims = stack_group(group, sig)
             if n_stack > len(group):
@@ -300,13 +339,11 @@ class FCTEngine:
                 v.nbytes for d in dims for v in d.values())
             columns = shipped - fact["send"].nbytes - sum(
                 d["send"].nbytes for d in dims)
-            with self._stats_lock:
-                self.bytes_shipped += shipped
-                self.column_bytes_shipped += columns
+            self._c_bytes.inc(shipped)
+            self._c_column_bytes.inc(columns)
         out = fn(fact, dims)
-        with self._stats_lock:
-            self.batches_run += 1
-            self.cns_run += len(group)
+        self._c_batches.inc()
+        self._c_cns.inc(len(group))
         return out
 
     @staticmethod
@@ -397,10 +434,11 @@ class FCTEngine:
 
     def stats(self) -> dict:
         out = self.cache.stats()
-        with self._stats_lock:
-            out.update(batches_run=self.batches_run, cns_run=self.cns_run,
-                       bytes_shipped=self.bytes_shipped,
-                       column_bytes_shipped=self.column_bytes_shipped)
+        batches, cns, shipped, columns = self.metrics.values(
+            self._c_batches, self._c_cns, self._c_bytes,
+            self._c_column_bytes)
+        out.update(batches_run=batches, cns_run=cns, bytes_shipped=shipped,
+                   column_bytes_shipped=columns)
         return out
 
 

@@ -37,6 +37,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.plan import CNPlan, RelationRef
+from repro.obs import default_registry
+from repro.obs import span as obs_span
 from repro.runtime.batch import PlanSignature, RelationSig, x64_flag
 from repro.runtime.cache import LruDict
 
@@ -58,7 +60,8 @@ class RelationStore:
     arrays created under different x64 modes must not alias).
     """
 
-    def __init__(self, mesh: Mesh, max_bytes: Optional[int] = None) -> None:
+    def __init__(self, mesh: Mesh, max_bytes: Optional[int] = None,
+                 metrics=None) -> None:
         if max_bytes is not None and max_bytes < 1:
             raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
         self.mesh = mesh
@@ -66,14 +69,36 @@ class RelationStore:
         self._sharding = NamedSharding(mesh, P("w"))
         self._entries: LruDict = LruDict()   # key -> StoredColumns
         self._lock = threading.Lock()
-        self.uploads = 0
-        self.hits = 0
-        self.evictions = 0
-        self.upload_bytes = 0
-        self.resident_bytes = 0
+        self.metrics = metrics if metrics is not None else default_registry()
+        self._c_uploads = self.metrics.counter("store.uploads")
+        self._c_hits = self.metrics.counter("store.hits")
+        self._c_evictions = self.metrics.counter("store.evictions")
+        self._c_upload_bytes = self.metrics.counter("store.upload_bytes")
+        self._g_resident = self.metrics.gauge("store.resident_bytes")
         # bumped by clear(): an upload that started before an invalidation
         # must not re-insert pre-invalidation columns after it
         self.epoch = 0
+
+    # legacy attribute views over the registry-owned instruments
+    @property
+    def uploads(self) -> int:
+        return self._c_uploads.value
+
+    @property
+    def hits(self) -> int:
+        return self._c_hits.value
+
+    @property
+    def evictions(self) -> int:
+        return self._c_evictions.value
+
+    @property
+    def upload_bytes(self) -> int:
+        return self._c_upload_bytes.value
+
+    @property
+    def resident_bytes(self) -> int:
+        return self._g_resident.value
 
     # -- lookup / upload -----------------------------------------------------
 
@@ -85,37 +110,37 @@ class RelationStore:
         with self._lock:
             cached = self._entries.hit(key)
             if cached is not None:
-                self.hits += 1
+                self._c_hits.inc()
                 return cached
             epoch = self.epoch
-        text, keys = ref.store_columns(rows_pad, text_pad)  # outside the lock
-        nbytes = text.nbytes + keys.nbytes
-        stored = StoredColumns(
-            text=jax.device_put(text, self._sharding),
-            keys=jax.device_put(keys, self._sharding), nbytes=nbytes)
+        with obs_span("store.upload", rows_pad=rows_pad,
+                      text_pad=text_pad) as sp:     # outside the lock
+            text, keys = ref.store_columns(rows_pad, text_pad)
+            nbytes = text.nbytes + keys.nbytes
+            sp.args["bytes"] = nbytes
+            stored = StoredColumns(
+                text=jax.device_put(text, self._sharding),
+                keys=jax.device_put(keys, self._sharding), nbytes=nbytes)
         with self._lock:
             raced = self._entries.hit(key)
             if raced is not None:      # concurrent uploader won
-                self.hits += 1
+                self._c_hits.inc()
                 return raced
+            self._c_uploads.inc()
+            self._c_upload_bytes.inc(nbytes)
             if self.epoch != epoch:
                 # a clear() (data invalidation) overtook this upload: the
                 # columns may predate the mutation, and the row-index
                 # fingerprint cannot tell — serve this dispatch, cache
                 # nothing (the next reference re-reads the base arrays)
-                self.uploads += 1
-                self.upload_bytes += nbytes
                 return stored
-            self.uploads += 1
-            self.upload_bytes += nbytes
-            self.resident_bytes += nbytes
+            resident = self._g_resident.add(nbytes)
             self._entries.put(key, stored)
             if self.max_bytes is not None:
-                while (self.resident_bytes > self.max_bytes
-                       and len(self._entries) > 1):
+                while resident > self.max_bytes and len(self._entries) > 1:
                     _, dropped = self._entries.popitem(last=False)
-                    self.resident_bytes -= dropped.nbytes
-                    self.evictions += 1
+                    resident = self._g_resident.add(-dropped.nbytes)
+                    self._c_evictions.inc()
             return stored
 
     # -- lifecycle / introspection ------------------------------------------
@@ -126,7 +151,7 @@ class RelationStore:
         with self._lock:
             dropped = len(self._entries)
             self._entries.clear()
-            self.resident_bytes = 0
+            self._g_resident.set(0)
             self.epoch += 1        # fence in-flight uploads (see columns())
             return dropped
 
@@ -134,13 +159,16 @@ class RelationStore:
         return len(self._entries)
 
     def stats(self) -> Dict[str, int]:
+        uploads, hits, evictions, up_bytes, resident = self.metrics.values(
+            self._c_uploads, self._c_hits, self._c_evictions,
+            self._c_upload_bytes, self._g_resident)
         with self._lock:
             return {"store_entries": len(self._entries),
-                    "store_uploads": self.uploads,
-                    "store_hits": self.hits,
-                    "store_evictions": self.evictions,
-                    "store_upload_bytes": self.upload_bytes,
-                    "store_bytes": self.resident_bytes}
+                    "store_uploads": uploads,
+                    "store_hits": hits,
+                    "store_evictions": evictions,
+                    "store_upload_bytes": up_bytes,
+                    "store_bytes": resident}
 
 
 # ---------------------------------------------------------------------------

@@ -42,6 +42,7 @@ from typing import List, Optional, Tuple
 
 from repro.api.request import FCTRequest
 from repro.api.session import FCTSession
+from repro.obs import OCCUPANCY_BUCKETS, Trace, default_registry
 
 
 class FlushPool:
@@ -53,37 +54,51 @@ class FlushPool:
     One pool serves all tenants of a gateway; ``shutdown`` drains it.
     """
 
-    def __init__(self, max_workers: int = 4) -> None:
+    def __init__(self, max_workers: int = 4, metrics=None) -> None:
         if max_workers < 1:
             raise ValueError(f"max_workers must be >= 1, got {max_workers}")
         self.max_workers = max_workers
         self._ex = ThreadPoolExecutor(max_workers=max_workers,
                                       thread_name_prefix="fct-flush")
-        self._lock = threading.Lock()
-        self.flushes = 0
-        self.inflight = 0
-        self.peak_inflight = 0
+        self.metrics = metrics if metrics is not None else default_registry()
+        self._c_flushes = self.metrics.counter("flush_pool.flushes")
+        self._g_inflight = self.metrics.gauge("flush_pool.inflight")
+        self._g_peak = self.metrics.gauge("flush_pool.peak_inflight",
+                                          agg="max")
+
+    # legacy attribute views over the registry-owned instruments
+    @property
+    def flushes(self) -> int:
+        return self._c_flushes.value
+
+    @property
+    def inflight(self) -> int:
+        return self._g_inflight.value
+
+    @property
+    def peak_inflight(self) -> int:
+        return self._g_peak.value
 
     def submit(self, flush) -> Future:
         def run():
-            with self._lock:
-                self.flushes += 1
-                self.inflight += 1
-                self.peak_inflight = max(self.peak_inflight, self.inflight)
+            self._c_flushes.inc()
+            # Gauge.add returns the post-add depth atomically, so the peak
+            # never misses a concurrent spike
+            self._g_peak.set_max(self._g_inflight.add(1))
             try:
                 flush()
             finally:
-                with self._lock:
-                    self.inflight -= 1
+                self._g_inflight.add(-1)
 
         return self._ex.submit(run)
 
     def stats(self) -> dict:
-        with self._lock:
-            return {"flush_workers": self.max_workers,
-                    "flushes": self.flushes,
-                    "flush_inflight": self.inflight,
-                    "flush_peak_inflight": self.peak_inflight}
+        flushes, inflight, peak = self.metrics.values(
+            self._c_flushes, self._g_inflight, self._g_peak)
+        return {"flush_workers": self.max_workers,
+                "flushes": flushes,
+                "flush_inflight": inflight,
+                "flush_peak_inflight": peak}
 
     def shutdown(self) -> None:
         self._ex.shutdown(wait=True)
@@ -93,7 +108,8 @@ class DynamicBatcher:
     """Collect requests for ``window_ms``; flush through ``query_batch``."""
 
     def __init__(self, session: FCTSession, window_ms: float = 1.0,
-                 name: str = "", pool: Optional[FlushPool] = None) -> None:
+                 name: str = "", pool: Optional[FlushPool] = None,
+                 metrics=None) -> None:
         if window_ms < 0:
             raise ValueError(f"window_ms must be >= 0, got {window_ms}")
         self.session = session
@@ -101,24 +117,49 @@ class DynamicBatcher:
         self.name = name
         self._pool = pool
         self._outstanding: List[Future] = []   # pooled flushes not yet done
-        self._pending: List[Tuple[FCTRequest, Future]] = []
+        # (request, future, trace, enqueue perf_counter_ns)
+        self._pending: List[Tuple[FCTRequest, Future, Trace, int]] = []
         self._cv = threading.Condition()
         self._closed = False
-        # occupancy telemetry (read under _cv by stats())
-        self.windows_flushed = 0
-        self.queries_batched = 0
-        self.max_window_queries = 0
+        # occupancy telemetry (gateway passes a per-tenant labeled registry)
+        self.metrics = metrics if metrics is not None else default_registry()
+        self._c_windows = self.metrics.counter("batcher.windows_flushed")
+        self._c_queries = self.metrics.counter("batcher.queries_batched")
+        self._g_max_window = self.metrics.gauge("batcher.max_window_queries",
+                                                agg="max")
+        self._h_window = self.metrics.histogram("batcher.window_queries",
+                                                buckets=OCCUPANCY_BUCKETS)
         self._thread = threading.Thread(
             target=self._loop, name=f"fct-batcher-{name or hex(id(self))}",
             daemon=True)
         self._thread.start()
 
-    def submit(self, request: FCTRequest) -> Future:
+    # legacy attribute views over the registry-owned instruments
+    @property
+    def windows_flushed(self) -> int:
+        return self._c_windows.value
+
+    @property
+    def queries_batched(self) -> int:
+        return self._c_queries.value
+
+    @property
+    def max_window_queries(self) -> int:
+        return self._g_max_window.value
+
+    def submit(self, request: FCTRequest,
+               trace: Optional[Trace] = None) -> Future:
+        """Enqueue one request; ``trace`` continues a span tree the caller
+        (the gateway) already opened — queue wait and session stages record
+        onto it.  Standalone callers get a fresh trace per request."""
         fut: Future = Future()
+        if trace is None:
+            trace = Trace()
         with self._cv:
             if self._closed:
                 raise RuntimeError("batcher is closed")
-            self._pending.append((request, fut))
+            self._pending.append((request, fut, trace,
+                                  time.perf_counter_ns()))
             self._cv.notify()
         return fut
 
@@ -156,25 +197,35 @@ class DynamicBatcher:
             if closed:
                 return
 
-    def _flush(self, batch: List[Tuple[FCTRequest, Future]]) -> None:
-        reqs = [r for r, _ in batch]
+    def _flush(self, batch: List[Tuple[FCTRequest, Future, Trace, int]]) -> None:
+        reqs = [r for r, _, _, _ in batch]
+        traces = [t for _, _, t, _ in batch]
+        t_flush_ns = time.perf_counter_ns()
+        for _, _, trace, t_enq_ns in batch:
+            # queue wait: enqueue -> flush start, one span per request
+            trace.add_span("batcher.window", t_enq_ns,
+                           t_flush_ns - t_enq_ns, queued=len(batch))
         try:
-            responses = self.session.query_batch(reqs)
+            responses = self.session.query_batch(reqs, traces=traces)
         except BaseException as exc:
             # batch-wide failure (e.g. histogram overflow): every request in
             # the window shared the dispatch, so every future gets the error
-            for _, fut in batch:
+            for _, fut, _, _ in batch:
                 if not fut.cancelled():
                     try:
                         fut.set_exception(exc)
                     except Exception:      # racing cancel()
                         pass
             return
-        with self._cv:
-            self.windows_flushed += 1
-            self.queries_batched += len(batch)
-            self.max_window_queries = max(self.max_window_queries, len(batch))
-        for (_, fut), resp in zip(batch, responses):
+        dur_ns = time.perf_counter_ns() - t_flush_ns
+        for trace in traces:
+            trace.add_span("batcher.flush", t_flush_ns, dur_ns,
+                           window_queries=len(batch))
+        self._c_windows.inc()
+        self._c_queries.inc(len(batch))
+        self._g_max_window.set_max(len(batch))
+        self._h_window.observe(len(batch))
+        for (_, fut, _, _), resp in zip(batch, responses):
             if not fut.cancelled():
                 try:
                     fut.set_result(resp)
@@ -182,10 +233,8 @@ class DynamicBatcher:
                     pass
 
     def stats(self) -> dict:
-        with self._cv:
-            windows = self.windows_flushed
-            queries = self.queries_batched
-            peak = self.max_window_queries
+        windows, queries, peak = self.metrics.values(
+            self._c_windows, self._c_queries, self._g_max_window)
         return {"windows_flushed": windows, "queries_batched": queries,
                 "max_window_queries": peak,
                 "mean_window_queries": round(queries / windows, 3)

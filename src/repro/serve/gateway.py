@@ -41,12 +41,15 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Tuple
 
 from repro.api.request import FCTRequest, FCTResponse
 from repro.api.session import FCTSession
 from repro.core.star import topk_terms
+from repro.obs import LATENCY_BUCKETS_MS, Trace, default_registry
+from repro.obs import span as obs_span
 from repro.serve.batcher import DynamicBatcher, FlushPool
 from repro.serve.registry import SchemaRegistry
 from repro.serve.result_cache import ResultCache
@@ -104,7 +107,8 @@ class _InflightEntry:
     the entry is registered."""
 
     generation: int
-    followers: List[Tuple[Future, FCTRequest, tuple]] = \
+    # (future, request, resolved keywords, edge trace, submit perf_counter)
+    followers: List[Tuple[Future, FCTRequest, tuple, Trace, float]] = \
         dataclasses.field(default_factory=list)
 
 
@@ -122,27 +126,45 @@ class _Lane:
     inflight: Dict[tuple, _InflightEntry] = dataclasses.field(
         default_factory=dict)
     sem: Optional[threading.Semaphore] = None   # per-tenant admission bound
-    coalesced: int = 0
+    # per-tenant labeled instruments (schema=<name>): end-to-end gateway
+    # latency, engine shuffle bytes attributed at completion, coalesced count
+    latency: object = None               # obs.Histogram, gateway.query_latency_ms
+    shuffle: object = None               # obs.Counter, gateway.shuffle_bytes
+    c_coalesced: object = None           # obs.Counter, gateway.coalesced
 
 
 class Gateway:
     """submit(schema, request) -> Future over a SchemaRegistry."""
 
     def __init__(self, registry: SchemaRegistry,
-                 config: Optional[GatewayConfig] = None) -> None:
+                 config: Optional[GatewayConfig] = None,
+                 metrics=None) -> None:
         self.registry = registry
         self.config = config if config is not None else GatewayConfig()
         self._lanes: Dict[str, _Lane] = {}
         self._lock = threading.Lock()
         self._inflight = threading.Semaphore(self.config.max_inflight)
+        # defaults to the same process-wide registry the SchemaRegistry's
+        # sessions label into, so one snapshot covers the whole stack
+        self.metrics = metrics if metrics is not None else default_registry()
         # one flush pool for ALL tenants: windows of different tenants run
         # their query_batch in parallel instead of convoying behind one
         # slow tenant's device transfer (None = legacy inline flushing)
-        self._flush_pool = (FlushPool(self.config.flush_workers)
+        self._flush_pool = (FlushPool(self.config.flush_workers,
+                                      metrics=self.metrics)
                             if self.config.flush_workers else None)
         self._closed = False
-        self.submitted = 0
-        self.rejected = 0
+        self._c_submitted = self.metrics.counter("gateway.submitted")
+        self._c_rejected = self.metrics.counter("gateway.rejected")
+
+    # legacy attribute views over the registry-owned counters
+    @property
+    def submitted(self) -> int:
+        return self._c_submitted.value
+
+    @property
+    def rejected(self) -> int:
+        return self._c_rejected.value
 
     # -- per-tenant lane management -----------------------------------------
 
@@ -158,16 +180,21 @@ class Gateway:
             lane = self._lanes.get(schema)
             if lane is None:
                 per_tenant = self.config.max_inflight_per_tenant
+                lm = self.metrics.labeled(schema=schema)
                 lane = self._lanes[schema] = _Lane(
                     session=session,
                     batcher=DynamicBatcher(
                         session, window_ms=self.config.batch_window_ms,
-                        name=schema, pool=self._flush_pool),
+                        name=schema, pool=self._flush_pool, metrics=lm),
                     results=ResultCache(
                         max_entries=self.config.result_cache_entries,
-                        ttl_s=self.config.result_cache_ttl_s),
+                        ttl_s=self.config.result_cache_ttl_s, metrics=lm),
                     sem=(threading.Semaphore(per_tenant)
-                         if per_tenant is not None else None))
+                         if per_tenant is not None else None),
+                    latency=lm.histogram("gateway.query_latency_ms",
+                                         buckets=LATENCY_BUCKETS_MS),
+                    shuffle=lm.counter("gateway.shuffle_bytes"),
+                    c_coalesced=lm.counter("gateway.coalesced"))
             return lane
 
     @staticmethod
@@ -177,23 +204,34 @@ class Gateway:
                 req.sample_frac, req.salt)
 
     def _serve_hit(self, lane: _Lane, master: FCTResponse, req: FCTRequest,
-                   kws: Tuple[int, ...],
-                   coalesced: bool = False) -> FCTResponse:
+                   kws: Tuple[int, ...], coalesced: bool = False,
+                   trace: Optional[Trace] = None) -> FCTResponse:
         """Re-bind a memoized (or leader) response to the incoming request:
         slice its ``top_k`` from the full histogram (Def. 6 selection
-        against the tenant's stop list), mark it, zero the engine delta."""
+        against the tenant's stop list), mark it, zero the engine delta.
+        The top-k re-slice IS this request's finalize work (nothing was
+        planned or dispatched), so that's the one span it records."""
+        t0 = time.perf_counter()
+        t0_ns = time.perf_counter_ns()
         freq = master.all_freqs.copy()    # callers may mutate their response
         ids, f = topk_terms(freq, kws, req.top_k, lane.session.stop_mask)
         if lane.session.tokenizer is not None:
             terms = [lane.session.tokenizer.decode(t) for t in ids]
         else:
             terms = [f"<{int(t)}>" for t in ids]
+        finalize_ms = (time.perf_counter() - t0) * 1e3
+        if trace is not None:
+            trace.add_span("finalize", t0_ns, time.perf_counter_ns() - t0_ns,
+                           top_k=req.top_k, coalesced=coalesced)
         return dataclasses.replace(
             master, terms=terms, term_ids=ids, freqs=f, all_freqs=freq,
-            timings={"plan_ms": 0.0, "execute_ms": 0.0, "total_ms": 0.0},
+            timings={"plan_ms": 0.0, "dispatch_ms": 0.0, "collect_ms": 0.0,
+                     "finalize_ms": round(finalize_ms, 3),
+                     "execute_ms": round(finalize_ms, 3),
+                     "total_ms": round(finalize_ms, 3)},
             engine_stats={k: 0 for k in master.engine_stats},
             cold=False, cache_hit=not coalesced, coalesced=coalesced,
-            request=req)
+            request=req, trace=trace)
 
     # -- request path --------------------------------------------------------
 
@@ -206,18 +244,26 @@ class Gateway:
         """
         if self._closed:
             raise RuntimeError("gateway is closed")
+        t_submit = time.perf_counter()
         try:
             lane = self._lane(schema)
             resolved = lane.session.resolve_keywords(request.keywords)
         except BaseException:
-            self._count("rejected")
+            self._c_rejected.inc()
             raise
         key = self._cache_key(resolved, request)
-        cached = lane.results.get(key)
+        # the edge trace: every admitted request gets one, covering the
+        # cache lookup here and — on a miss — the batcher window and the
+        # session stages downstream (the same Trace object rides through)
+        trace = Trace()
+        with trace.activate(), obs_span("cache.lookup", schema=schema):
+            cached = lane.results.get(key)
         if cached is not None:
             fut: Future = Future()
-            fut.set_result(self._serve_hit(lane, cached, request, resolved))
-            self._count("submitted")
+            fut.set_result(self._serve_hit(lane, cached, request, resolved,
+                                           trace=trace))
+            lane.latency.observe((time.perf_counter() - t_submit) * 1e3)
+            self._c_submitted.inc()
             return fut
         # coalesce onto an identical in-flight query: the repeat attaches to
         # the leader's completion instead of dispatching again, and bypasses
@@ -233,9 +279,10 @@ class Gateway:
             cur = lane.inflight.get(key)
             if cur is not None and cur.generation == lane.results.generation:
                 fut = Future()
-                cur.followers.append((fut, request, resolved))
-                lane.coalesced += 1
-                self.submitted += 1
+                cur.followers.append((fut, request, resolved, trace,
+                                      t_submit))
+                lane.c_coalesced.inc()
+                self._c_submitted.inc()
                 return fut
             lane.inflight[key] = entry
         acquired = []
@@ -245,7 +292,7 @@ class Gateway:
                 acquired.append(lane.sem)
             self._inflight.acquire()      # backpressure: bounded device work
             acquired.append(self._inflight)
-            inner = lane.batcher.submit(request)
+            inner = lane.batcher.submit(request, trace=trace)
         except BaseException as exc:      # incl. interrupts while blocked
             for sem in acquired:
                 sem.release()
@@ -253,9 +300,9 @@ class Gateway:
                 if lane.inflight.get(key) is entry:
                     del lane.inflight[key]
                 followers = list(entry.followers)
-            for f, _, _ in followers:     # they attached to a dead leader
+            for f, _, _, _, _ in followers:  # they attached to a dead leader
                 self._resolve(f, exc=exc)
-            self._count("rejected")
+            self._c_rejected.inc()
             raise
         # the caller gets a gateway-owned future resolved AFTER the result
         # is copied into the cache: Future.set_result wakes waiters before
@@ -264,14 +311,11 @@ class Gateway:
         # the trailing callback snapshots it for later hits
         outer: Future = Future()
         inner.add_done_callback(
-            lambda f, lane=lane, key=key, entry=entry, outer=outer:
-                self._relay(lane, key, entry, f, outer))
-        self._count("submitted")
+            lambda f, lane=lane, key=key, entry=entry, outer=outer,
+                   t_submit=t_submit:
+                self._relay(lane, key, entry, f, outer, t_submit))
+        self._c_submitted.inc()
         return outer
-
-    def _count(self, counter: str) -> None:
-        with self._lock:                  # concurrent submitters race else
-            setattr(self, counter, getattr(self, counter) + 1)
 
     def _release(self, lane: _Lane) -> None:
         self._inflight.release()
@@ -291,7 +335,7 @@ class Gateway:
             pass
 
     def _relay(self, lane: _Lane, key, entry: _InflightEntry,
-               inner: "Future", outer: "Future") -> None:
+               inner: "Future", outer: "Future", t_submit: float) -> None:
         self._release(lane)
         with self._lock:
             # remove only OUR entry: an invalidate may have let a fresh
@@ -301,29 +345,35 @@ class Gateway:
             followers = list(entry.followers)  # no attachments after this
         if inner.cancelled():
             outer.cancel()
-            for f, _, _ in followers:
+            for f, _, _, _, _ in followers:
                 f.cancel()
             return
         exc = inner.exception()
         if exc is not None:
             self._resolve(outer, exc=exc)
-            for f, _, _ in followers:     # the shared dispatch failed
+            for f, _, _, _, _ in followers:  # the shared dispatch failed
                 self._resolve(f, exc=exc)
             return
         resp = inner.result()
+        lane.latency.observe((time.perf_counter() - t_submit) * 1e3)
+        lane.shuffle.inc(int(resp.shuffle_bytes))
         # cache a private master FIRST: the caller owns `resp` once the
         # outer future resolves and may mutate its histogram/stats, which
         # must not poison later hits.  `generation` drops the insert when
-        # an invalidate() overtook this query in flight.
+        # an invalidate() overtook this query in flight.  The master drops
+        # the leader's trace — its spans belong to one request, not to the
+        # repeats a later hit serves.
         master = dataclasses.replace(
             resp, all_freqs=resp.all_freqs.copy(),
-            engine_stats=dict(resp.engine_stats))
+            engine_stats=dict(resp.engine_stats), trace=None)
         lane.results.put(key, master, generation=entry.generation)
         # coalesced followers re-slice their own top_k from the leader's
         # histogram — each gets a private copy, like a cache hit
-        for f, f_req, f_kws in followers:
-            self._resolve(f, result=self._serve_hit(lane, master, f_req,
-                                                    f_kws, coalesced=True))
+        for f, f_req, f_kws, f_trace, f_t_submit in followers:
+            result = self._serve_hit(lane, master, f_req, f_kws,
+                                     coalesced=True, trace=f_trace)
+            lane.latency.observe((time.perf_counter() - f_t_submit) * 1e3)
+            self._resolve(f, result=result)
         self._resolve(outer, result=resp)
 
     def query(self, schema: str, request: FCTRequest,
@@ -363,9 +413,10 @@ class Gateway:
         ``"gateway"``."""
         with self._lock:
             lanes = dict(self._lanes)
-            coalesced = {n: lane.coalesced for n, lane in lanes.items()}
+        submitted, rejected = self.metrics.values(self._c_submitted,
+                                                  self._c_rejected)
         out: Dict[str, dict] = {"gateway": {
-            "submitted": self.submitted, "rejected": self.rejected,
+            "submitted": submitted, "rejected": rejected,
             "max_inflight": self.config.max_inflight,
             "max_inflight_per_tenant": self.config.max_inflight_per_tenant,
             "tenants": len(lanes)}}
@@ -375,7 +426,7 @@ class Gateway:
             stats = dict(lane.results.stats())
             stats.update(lane.batcher.stats())
             stats.update(lane.session.stats())   # carries accum_policy
-            stats["coalesced"] = coalesced[name]
+            stats["coalesced"] = lane.c_coalesced.value
             out[name] = stats
         return out
 

@@ -37,6 +37,7 @@ from typing import Dict, List, Optional
 
 from repro.api import FCTSession, SessionConfig
 from repro.data.schema import StarSchema
+from repro.obs import default_registry
 
 
 @dataclasses.dataclass
@@ -70,12 +71,16 @@ class SchemaRegistry:
                  total_plan_entries: int = 64,
                  total_tuple_set_entries: int = 32,
                  total_store_bytes: Optional[int] = None,
-                 mesh=None) -> None:
+                 mesh=None, metrics=None) -> None:
         self.total_cache_entries = total_cache_entries
         self.total_plan_entries = total_plan_entries
         self.total_tuple_set_entries = total_tuple_set_entries
         self.total_store_bytes = total_store_bytes
         self.mesh = mesh
+        # every tenant session's instruments carry a schema=<name> label in
+        # this registry (gateways default to the same process registry, so
+        # one snapshot covers the whole serving stack)
+        self.metrics = metrics if metrics is not None else default_registry()
         self._tenants: Dict[str, _Tenant] = {}
         self._lock = threading.Lock()
 
@@ -144,7 +149,8 @@ class SchemaRegistry:
                       else self._partitioned_config(n_tenants))
             session = FCTSession(schema, tokenizer=tenant.tokenizer,
                                  mesh=self.mesh, config=config,
-                                 stop_mask=tenant.stop_mask)
+                                 stop_mask=tenant.stop_mask,
+                                 metrics=self.metrics.labeled(schema=name))
             with self._lock:
                 tenant.session = session
                 return tenant.session

@@ -26,6 +26,7 @@ import threading
 import time
 from typing import Hashable, Optional
 
+from repro.obs import default_registry
 from repro.runtime.cache import LruDict
 
 
@@ -39,20 +40,40 @@ class ResultCache:
     """
 
     def __init__(self, max_entries: Optional[int] = 256,
-                 ttl_s: Optional[float] = 60.0, clock=time.monotonic) -> None:
+                 ttl_s: Optional[float] = 60.0, clock=time.monotonic,
+                 metrics=None) -> None:
         if ttl_s is not None and ttl_s < 0:
             raise ValueError(f"ttl_s must be >= 0 or None, got {ttl_s}")
         self.ttl_s = ttl_s
         self._clock = clock
         self._entries = LruDict(max_entries)  # key -> (expires_at, value)
         self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
-        self.expirations = 0
-        self.invalidations = 0
+        self.metrics = metrics if metrics is not None else default_registry()
+        self._c_hits = self.metrics.counter("result_cache.hits")
+        self._c_misses = self.metrics.counter("result_cache.misses")
+        self._c_expirations = self.metrics.counter("result_cache.expirations")
+        self._c_invalidations = self.metrics.counter(
+            "result_cache.invalidations")
         # bumped by every invalidate(): a put that started (query dispatched)
         # before an invalidation must not re-insert pre-invalidation data
         self.generation = 0
+
+    # legacy attribute views over the registry-owned counters
+    @property
+    def hits(self) -> int:
+        return self._c_hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._c_misses.value
+
+    @property
+    def expirations(self) -> int:
+        return self._c_expirations.value
+
+    @property
+    def invalidations(self) -> int:
+        return self._c_invalidations.value
 
     @property
     def enabled(self) -> bool:
@@ -65,19 +86,19 @@ class ResultCache:
         the entry so a later put can refresh it)."""
         with self._lock:
             if not self.enabled:
-                self.misses += 1
+                self._c_misses.inc()
                 return None
             entry = self._entries.hit(key)
             if entry is None:
-                self.misses += 1
+                self._c_misses.inc()
                 return None
             expires_at, value = entry
             if expires_at is not None and self._clock() >= expires_at:
                 del self._entries[key]
-                self.expirations += 1
-                self.misses += 1
+                self._c_expirations.inc()
+                self._c_misses.inc()
                 return None
-            self.hits += 1
+            self._c_hits.inc()
             return value
 
     def put(self, key: Hashable, value,
@@ -109,15 +130,19 @@ class ResultCache:
             else:
                 dropped = len(self._entries)
                 self._entries.clear()
-            self.invalidations += dropped
+            self._c_invalidations.inc(dropped)
             return dropped
 
     def __len__(self) -> int:
         return len(self._entries)
 
     def stats(self) -> dict:
-        return {"result_entries": len(self._entries),
-                "result_hits": self.hits, "result_misses": self.misses,
-                "result_expirations": self.expirations,
-                "result_invalidations": self.invalidations,
-                "result_evictions": self._entries.evictions}
+        hits, misses, expirations, invalidations = self.metrics.values(
+            self._c_hits, self._c_misses, self._c_expirations,
+            self._c_invalidations)
+        with self._lock:
+            return {"result_entries": len(self._entries),
+                    "result_hits": hits, "result_misses": misses,
+                    "result_expirations": expirations,
+                    "result_invalidations": invalidations,
+                    "result_evictions": self._entries.evictions}

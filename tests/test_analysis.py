@@ -165,6 +165,33 @@ def test_r3_requires_the_configured_lock(tmp_path):
     assert rule_ids(violations) == ["R3"]
 
 
+def test_r3_flags_unguarded_metric_bump_in_serve(tmp_path):
+    # growing a raw counter on a serve component instead of routing it
+    # through the metrics registry (the blessed lock owner) is flagged
+    violations, _ = run_rules(tmp_path, "serve/batcher.py", """\
+        class DynamicBatcher:
+            def _flush(self, batch):
+                self.windows_flushed += 1
+        """)
+    assert rule_ids(violations) == ["R3"]
+
+
+def test_r3_covers_obs_metrics_instruments(tmp_path):
+    # obs/metrics.py is a THREADED_MODULE: instrument bumps are clean only
+    # under the registry's shared ``_lock`` — an unlocked fast path on the
+    # same instrument is flagged
+    violations, _ = run_rules(tmp_path, "obs/metrics.py", """\
+        class Counter:
+            def inc(self, n=1):
+                with self._lock:
+                    self._value += n
+
+            def inc_unlocked(self, n=1):
+                self._value += n
+        """)
+    assert rule_ids(violations) == ["R3"]
+
+
 # -- R4: no host sync in dispatch paths ---------------------------------------
 
 def test_r4_flags_host_sync_in_dispatch(tmp_path):

@@ -48,7 +48,8 @@ def test_session_warm_query_zero_retraces_and_plan_cache():
     assert st["queries_served"] == 2
     np.testing.assert_array_equal(r1.all_freqs, r2.all_freqs)
     np.testing.assert_array_equal(r1.all_freqs, fct_star(schema, kws, 3))
-    assert set(r1.timings) == {"plan_ms", "execute_ms", "total_ms"}
+    assert set(r1.timings) == {"plan_ms", "dispatch_ms", "collect_ms",
+                               "finalize_ms", "execute_ms", "total_ms"}
 
 
 def _tokenized_schema():

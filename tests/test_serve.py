@@ -199,9 +199,9 @@ def test_flush_pool_runs_tenants_in_parallel_and_counts_peak():
         session = reg.session(name)
         inner = session.query_batch
 
-        def synced(reqs, _inner=inner):
+        def synced(reqs, _inner=inner, **kw):
             barrier.wait()              # both tenants' flushes inside
-            return _inner(reqs)
+            return _inner(reqs, **kw)
 
         session.query_batch = synced
     fa = gw.submit("a", FCTRequest(keywords=tuple(kws), r_max=3))
@@ -222,9 +222,9 @@ def test_batcher_close_waits_for_pooled_flushes():
     release = threading.Event()
     inner = session.query_batch
 
-    def gated(reqs):
+    def gated(reqs, **kw):
         release.wait(timeout=60)
-        return inner(reqs)
+        return inner(reqs, **kw)
 
     session.query_batch = gated
     batcher = DynamicBatcher(session, window_ms=0.0, pool=pool)
