@@ -31,7 +31,7 @@ def main() -> None:
 
     from benchmarks import (common, device_scaling, kernel_micro, multi_query,
                             response_time, serving_load, shares_comm,
-                            shuffle_size, skew_adjust)
+                            shuffle_size, skew_adjust, topk_transfer)
     mods = {
         "response_time": response_time,
         "multi_query": multi_query,
@@ -40,6 +40,10 @@ def main() -> None:
         "skew_adjust": skew_adjust,
         "shares_comm": shares_comm,
         "kernel_micro": kernel_micro,
+        # finalize transfer budget: full-histogram vs fct_topk d2h bytes,
+        # plus the cross-CN-group pruning record; standalone merge-in
+        # --json semantics and a --quick CI mode like device_scaling
+        "topk_transfer": topk_transfer,
         # subprocess fan-out over forced device counts; also runnable
         # standalone (`python benchmarks/device_scaling.py`) with merge-in
         # --json semantics and a --quick CI mode

@@ -1,0 +1,159 @@
+"""Device->host transfer of the finalize step: full histogram vs fct_topk.
+
+The host finalize moves the whole O(vocab) histogram off the device per
+query just to keep its top k bins; the ``fct_topk`` family (PR 9) runs the
+top-k on device and moves O(k) candidates.  This sweep measures, per
+(vocab, k) point, the per-query ``device_to_host_bytes`` engine delta of
+both paths on the same dataset — plus bit-exactness of the answers — and
+one pruning record showing the cross-CN-group zero-bound prune skipping
+work without changing results.  Emits ``kind="fct_topk"`` records;
+``validate_bench.py`` requires the vocab=32768/k=10 point to show a >= 10x
+reduction (at int32 that point is 131072 bytes down to 132).
+
+Standalone use merges into BENCH_fct.json like device_scaling:
+``python benchmarks/topk_transfer.py [--quick] [--json PATH | --no-json]``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+VOCABS = (512, 4096, 32768)
+QUICK_VOCABS = (512, 4096)
+KS = (10, 100)
+QUICK_KS = (10,)
+
+
+def _dataset(vocab: int, skew: float = 0.0, seed: int = 5):
+    """TPC-H star dataset at a given vocab, keywords planted near the top
+    of the id range (same 8% selectivity as ``common.make_dataset``)."""
+    from repro.data.tpch import TpchConfig, generate, plant_keywords
+    cfg = TpchConfig(scale=1.0, fact_rows=3000, part_rows=400,
+                     supp_rows=200, order_rows=500, text_len=8,
+                     vocab_size=vocab, seed=seed, skew=skew)
+    kws = [vocab - 3, vocab - 2, vocab - 1]
+    schema = plant_keywords(generate(cfg),
+                            {"PART": [kws[0]], "SUPPLIER": [kws[1]],
+                             "ORDERS": [kws[2]]}, frac=0.08)
+    return schema, kws
+
+
+def _sessions(schema):
+    """(full-histogram session, device-topk session) on private engines so
+    per-query engine_stats deltas never mix."""
+    from repro.api import FCTSession, SessionConfig
+    from repro.runtime.cache import ExecutableCache
+    from repro.runtime.engine import FCTEngine
+    full = FCTSession(schema, engine=FCTEngine(cache=ExecutableCache()),
+                      config=SessionConfig())
+    topk = FCTSession(schema, engine=FCTEngine(cache=ExecutableCache()),
+                      config=SessionConfig(device_topk=True))
+    return full, topk
+
+
+def run(quick: bool = False) -> None:
+    import numpy as np
+
+    from benchmarks.common import emit, timed
+    from repro.api import FCTRequest
+
+    vocabs = QUICK_VOCABS if quick else VOCABS
+    ks = QUICK_KS if quick else KS
+    reductions = {}
+    for vocab in vocabs:
+        schema, kws = _dataset(vocab)
+        full, topk = _sessions(schema)
+        for k in ks:
+            req = FCTRequest(keywords=tuple(kws), top_k=k, r_max=4)
+            full.query(req), topk.query(req)  # compile both paths
+            rf = full.query(req)
+            rt = topk.query(req)
+            assert rf.finalize == "host" and rt.finalize == "device_topk", (
+                rf.finalize, rt.finalize)
+            bitexact = (np.array_equal(rf.term_ids[:len(rt.term_ids)],
+                                       rt.term_ids)
+                        and np.array_equal(rf.freqs[:len(rt.freqs)],
+                                           rt.freqs))
+            d2h_full = int(rf.engine_stats["device_to_host_bytes"])
+            d2h_topk = int(rt.engine_stats["device_to_host_bytes"])
+            ratio = round(d2h_full / max(d2h_topk, 1), 1)
+            us = timed(lambda: topk.query(req), warmup=0,
+                       iters=1 if quick else 3)
+            reductions[(vocab, k)] = ratio
+            emit(f"topk_transfer/v{vocab}_k{k}", us,
+                 f"d2h {d2h_full}B -> {d2h_topk}B ({ratio}x) "
+                 f"bitexact={bitexact}", kind="fct_topk", vocab=vocab, k=k,
+                 d2h_bytes_full=d2h_full, d2h_bytes_topk=d2h_topk,
+                 d2h_reduction_x=ratio, bitexact=bool(bitexact))
+            assert bitexact, (
+                f"device top-k diverged from host at vocab={vocab} k={k}")
+
+    # cross-CN-group pruning: on a skewed dataset most groups' volume-mass
+    # bound is 0 (their CNs join to nothing) — the zero prune must skip
+    # them, count them, and change nothing
+    schema, kws = _dataset(vocabs[0], skew=1.2, seed=7)
+    full, topk = _sessions(schema)
+    req = FCTRequest(keywords=tuple(kws), top_k=10, r_max=4)
+    full.query(req), topk.query(req)
+    rf, rt = full.query(req), topk.query(req)
+    pruned = int(rt.engine_stats["groups_pruned"])
+    pruned_rows = int(rt.engine_stats["pruned_rows"])
+    bitexact = (np.array_equal(rf.term_ids[:len(rt.term_ids)], rt.term_ids)
+                and np.array_equal(rf.freqs[:len(rt.freqs)], rt.freqs))
+    emit("topk_transfer/pruning", 0.0,
+         f"groups_pruned={pruned} pruned_rows={pruned_rows} "
+         f"bitexact={bitexact} (zero-bound groups skipped)",
+         kind="fct_topk", vocab=vocabs[0], k=10, groups_pruned=pruned,
+         pruned_rows=pruned_rows, bitexact=bool(bitexact))
+    assert bitexact, "pruned result diverged from full histogram"
+    assert pruned >= 1, "no CN group was pruned on the skewed workload"
+
+    if not quick:
+        assert reductions[(32768, 10)] >= 10.0, (
+            f"d2h reduction at vocab=32768 k=10 is only "
+            f"{reductions[(32768, 10)]}x, expected >= 10x")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI mode: vocabs (512, 4096), k=10, one iter")
+    ap.add_argument("--no-json", action="store_true",
+                    help="don't merge records into the JSON file")
+    ap.add_argument("--json", default="BENCH_fct.json", metavar="PATH",
+                    help="merge topk_transfer records into PATH")
+    args = ap.parse_args()
+
+    from benchmarks.common import RECORDS
+    run(quick=args.quick)
+    if args.no_json:
+        return
+    path = os.path.join(_ROOT, args.json) \
+        if not os.path.isabs(args.json) else args.json
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        import jax
+        payload = {"meta": {"backend": jax.default_backend(),
+                            "n_devices": len(jax.devices()),
+                            "jax": jax.__version__},
+                   "benchmarks": []}
+    payload["benchmarks"] = [
+        r for r in payload["benchmarks"]
+        if not str(r.get("name", "")).startswith("topk_transfer/")
+    ] + RECORDS
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# merged {len(RECORDS)} topk_transfer records into {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,8 +8,11 @@ and — unless ``--records-only`` — that the cold/warm trace counters the
 perf trajectory is judged by are present: at least one ``kind == "cold"``
 record with ``traces >= 1`` (the cold query really compiled something), one
 ``kind == "warm"`` record with ``traces == 0`` (the warm query really hit
-the executable cache), and at least one record measured on more than one
-device (the scale-out curves exist).
+the executable cache), at least one record measured on more than one
+device (the scale-out curves exist), and the ``kind == "fct_topk"``
+finalize-transfer records: the vocab=32768/k=10 point with a >= 10x
+device->host byte reduction and a pruning record with
+``groups_pruned >= 1`` — both bit-exact against the host oracle.
 
 CI runs the full check against the committed BENCH_fct.json (catching PRs
 that regenerate it without the cold/warm instrumentation) and the
@@ -48,6 +51,24 @@ def validate(path: str, records_only: bool = False) -> list:
         if not isinstance(rec.get("mesh"), dict):
             errors.append(f"benchmarks[{i}] ({rec.get('name')}): mesh axis "
                           "sizes missing")
+        if rec.get("kind") == "fct_topk":
+            tag = f"benchmarks[{i}] ({rec.get('name')})"
+            for field in ("k", "vocab"):
+                v = rec.get(field)
+                if not (isinstance(v, int) and v >= 1):
+                    errors.append(f"{tag}: fct_topk record needs int "
+                                  f"{field} >= 1")
+            has_bytes = all(
+                isinstance(rec.get(f), (int, float)) and rec.get(f) >= 0
+                for f in ("d2h_bytes_full", "d2h_bytes_topk"))
+            has_prune = isinstance(rec.get("groups_pruned"), int)
+            if not (has_bytes or has_prune):
+                errors.append(f"{tag}: fct_topk record carries neither the "
+                              "d2h byte pair nor a groups_pruned count")
+            if rec.get("bitexact") is not True:
+                errors.append(f"{tag}: fct_topk record without "
+                              "bitexact=true — the device top-k diverged "
+                              "from the host oracle (or stopped checking)")
     if not records_only:
         cold = [r for r in records if r.get("kind") == "cold"]
         warm = [r for r in records if r.get("kind") == "warm"]
@@ -62,6 +83,19 @@ def validate(path: str, records_only: bool = False) -> list:
                    for r in records):
             errors.append("no record measured on n_devices > 1 — the "
                           "device_scaling curves are missing")
+        topk = [r for r in records if r.get("kind") == "fct_topk"]
+        if not any(r.get("vocab") == 32768 and r.get("k") == 10
+                   and isinstance(r.get("d2h_bytes_topk"), (int, float))
+                   and r.get("d2h_bytes_full", 0)
+                   >= 10 * max(r.get("d2h_bytes_topk", 0), 1)
+                   for r in topk):
+            errors.append('no fct_topk record at vocab=32768/k=10 with a '
+                          '>= 10x device->host reduction — the finalize '
+                          'transfer-budget headline is missing')
+        if not any(isinstance(r.get("groups_pruned"), int)
+                   and r["groups_pruned"] >= 1 for r in topk):
+            errors.append("no fct_topk record with groups_pruned >= 1 — "
+                          "the cross-CN-group prune never fired")
     return errors
 
 

@@ -72,7 +72,11 @@ UNLOCKED_FUNCTIONS = ("__init__", "__post_init__", "__new__")
 #: ``np.asarray(traced)`` / ``jax.device_get`` / ``.block_until_ready()``
 #: anywhere else in the module blocks the async dispatch pipeline.
 HOST_SYNC_ALLOWED = {
-    "runtime/engine.py": ("_collect", "collect_total", "collect_individual"),
+    # dispatch_topk is allowed only for the OPT-IN threshold-pruning probe:
+    # an O(k) read of the running counts between groups, a deliberate
+    # latency-for-work trade documented on the method
+    "runtime/engine.py": ("_collect", "collect_total", "collect_individual",
+                          "dispatch_topk", "collect_topk"),
 }
 
 #: call spellings that force a host<->device synchronization
@@ -87,7 +91,8 @@ HOST_SYNC_METHODS = ("block_until_ready",)
 #: names — the invalidation protocol of PR 4: results computed from
 #: pre-mutation data may be SERVED once but must never be CACHED.
 EPOCH_FENCED_CACHES = {
-    "api/session.py": (("_tuple_sets", "_plan_cache"), ("_data_epoch",)),
+    "api/session.py": (("_tuple_sets", "_plan_cache", "_hf_dev"),
+                       ("_data_epoch",)),
     "runtime/store.py": (("_entries",), ("epoch",)),
     "serve/gateway.py": (("results",), ("generation",)),
     "serve/result_cache.py": (("_entries",), ("generation",)),

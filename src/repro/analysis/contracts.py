@@ -3,10 +3,11 @@
 The AST lint (layer 1) polices *source* invariants; this module checks the
 invariants that only exist in the *lowered program*.  It traces the exact
 shard_map programs the runtime engine dispatches — ``fct_batched`` /
-``fct_batched_percn`` (host-stacked relations) and ``fct_store`` /
-``fct_store_percn`` (device-resident columns) — over abstract
-``ShapeDtypeStruct`` arguments for representative ``PlanSignature`` buckets,
-and asserts on the closed jaxpr:
+``fct_batched_percn`` (host-stacked relations), ``fct_store`` /
+``fct_store_percn`` (device-resident columns) and the ``fct_topk``
+finalize family (on-device top-k over the aggregated histogram) — over
+abstract ``ShapeDtypeStruct`` arguments for representative
+``PlanSignature`` buckets, and asserts on the closed jaxpr:
 
 C1 (collective census)
     Exactly ONE cross-device reduction collective per dispatch: a
@@ -301,6 +302,115 @@ def check_contract(kind: str, sig: PlanSignature, n_stack: int, mesh,
     return failures
 
 
+def check_topk_contract(sig: PlanSignature, mesh,
+                        kw_pad: Optional[int] = None) -> List[str]:
+    """C1-C4 variant for the ``fct_topk`` finalize family.
+
+    The family's whole reason to exist is C3': its outputs are O(k), not
+    O(vocab/P) — ``k_eff`` counts in the policy dtype, ``k_eff`` int32 term
+    ids and one int32 overflow flag, ``2 * k_eff + 1`` elements total.  C1'
+    pins the merge topology: under reduce-scatter exactly THREE
+    ``all_gather``\\ s over the small k axis (values / ids / wrap flags) and
+    no reduction collective — a ``psum`` here would re-aggregate an
+    already-aggregated histogram; on replicated inputs (P=1 / psum mode)
+    zero collectives, since gathering replicated candidates would duplicate
+    each term P times.  C2 (integer closure) and C4 (pow-2 ``k_bucket``,
+    floor ``TOPK_BUCKET_MIN``) carry over unchanged.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.runtime.engine import (KW_BUCKET_MIN, TOPK_BUCKET_MIN,
+                                      _build_topk_fn, k_effective,
+                                      vocab_padded)
+
+    rs = sig.n_devices > 1
+    if kw_pad is None:
+        kw_pad = KW_BUCKET_MIN
+    tag = (f"fct_topk[P={sig.n_devices},vocab={sig.vocab},"
+           f"k_bucket={sig.k_bucket},{sig.accum.name}]")
+    failures: List[str] = []
+
+    # C4: the k axis must ride the same bucket lattice as every other
+    # data-dependent dim, or the executable cache grows per distinct k
+    if not (_is_pow2(sig.k_bucket) and sig.k_bucket >= TOPK_BUCKET_MIN):
+        failures.append(
+            f"{tag} C4: k_bucket={sig.k_bucket} is not a power of two >= "
+            f"TOPK_BUCKET_MIN={TOPK_BUCKET_MIN} (signature escaped "
+            f"bucket_pow2)")
+    if not (_is_pow2(kw_pad) and kw_pad >= KW_BUCKET_MIN):
+        failures.append(
+            f"{tag} C4: kw_pad={kw_pad} is not a power of two >= "
+            f"KW_BUCKET_MIN={KW_BUCKET_MIN}")
+    if failures:
+        return failures
+
+    vp = vocab_padded(sig.vocab, sig.n_devices) if rs else sig.vocab
+    k_eff = k_effective(sig)
+    hist = _sds((vp,), sig.accum.dtype)
+    kw = _sds((kw_pad,), jnp.int32)
+    excl = _sds((vp,), jnp.int8)
+    try:
+        jaxpr = jax.make_jaxpr(_build_topk_fn(sig, mesh, rs, kw_pad))(
+            hist, kw, excl)
+    except Exception as exc:
+        return [f"{tag} trace failed: {type(exc).__name__}: {exc}"]
+
+    # C1': merge topology
+    counts = count_primitives(jaxpr, COLLECTIVE_PRIMITIVES)
+    reductions = sum(counts[n] for n in REDUCTION_PRIMITIVES)
+    if reductions:
+        got = {n: c for n, c in counts.items()
+               if c and n in REDUCTION_PRIMITIVES}
+        failures.append(
+            f"{tag} C1: {reductions} reduction collectives ({got}) in the "
+            f"finalize program — the histogram is already aggregated; a "
+            f"second reduction double-counts")
+    want_gathers = 3 if rs else 0
+    if counts["all_gather"] != want_gathers:
+        failures.append(
+            f"{tag} C1: {counts['all_gather']} all_gathers, expected "
+            f"{want_gathers} (values/ids/wrap over the k axis"
+            f"{'' if rs else '; replicated inputs need none'})")
+    extras = {n: c for n, c in counts.items()
+              if c and n not in REDUCTION_PRIMITIVES + ("all_gather",)}
+    if extras:
+        failures.append(f"{tag} C1: unexpected collectives {extras}")
+
+    # C2: integer closure
+    floats = float_avals(jaxpr)
+    if floats:
+        failures.append(
+            f"{tag} C2: {len(floats)} floating-point value(s) in an "
+            f"integer-exact program (first: {floats[0]})")
+
+    # C3': O(k) transfer budget
+    out_avals = jaxpr.out_avals
+    want_shapes = ((k_eff,), (k_eff,), ())
+    got_shapes = tuple(tuple(a.shape) for a in out_avals)
+    if got_shapes != want_shapes:
+        failures.append(
+            f"{tag} C3: output shapes {got_shapes}, expected {want_shapes} "
+            f"(counts[k_eff], ids[k_eff], wrap flag)")
+    else:
+        total = sum(int(a.size) for a in out_avals)
+        if total != 2 * k_eff + 1:
+            failures.append(
+                f"{tag} C3: {total} output elements, expected "
+                f"{2 * k_eff + 1} — the device->host transfer must stay "
+                f"O(k), not O(vocab/P)")
+        if out_avals[0].dtype != sig.accum.dtype:
+            failures.append(
+                f"{tag} C3: counts dtype {out_avals[0].dtype} does not "
+                f"advertise the accumulation policy ({sig.accum.name} -> "
+                f"{sig.accum.dtype.__name__})")
+        if any(a.dtype != jnp.int32 for a in out_avals[1:]):
+            failures.append(
+                f"{tag} C3: ids/wrap dtypes "
+                f"{[str(a.dtype) for a in out_avals[1:]]}, expected int32")
+    return failures
+
+
 def check_all_contracts(mesh=None,
                         policies: Optional[Sequence[AccumPolicy]] = None,
                         histogram_backend: str = "ref"
@@ -329,5 +439,13 @@ def check_all_contracts(mesh=None,
             n_stack = 2 if not kind.endswith("percn") else CN_BUCKET_MIN
             failures.extend(check_contract(kind, sig, n_stack, mesh,
                                            histogram_backend))
+            checked += 1
+    # the fct_topk finalize family, over the same two vocab buckets (100
+    # exercises the reduce-scatter vocab pad at P>1, 512 divides evenly)
+    from repro.runtime.engine import topk_signature
+    for accum in policies:
+        for vocab in (100, 512):
+            tsig = topk_signature(vocab, n_devices, accum, k=10)
+            failures.extend(check_topk_contract(tsig, mesh))
             checked += 1
     return failures, checked

@@ -37,6 +37,11 @@ class FCTRequest:
     rho: int = 4
     sample_frac: float = 1.0
     salt: int = 0
+    #: force the full-histogram path even on sessions with
+    #: ``SessionConfig.device_topk``: the caller needs ``all_freqs`` (the
+    #: gateway sets this on result-cache fills, which memoize the histogram
+    #: so later hits can re-slice any k from it)
+    need_histogram: bool = False
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "keywords", tuple(self.keywords))
@@ -90,7 +95,10 @@ class FCTResponse:
     terms: List[str]
     term_ids: np.ndarray
     freqs: np.ndarray
-    all_freqs: np.ndarray
+    #: full frequency vector the top-k was drawn from — ``None`` on the
+    #: device-side top-k path (``finalize == "device_topk"``), whose whole
+    #: point is that the histogram never reaches the host
+    all_freqs: Optional[np.ndarray]
     n_cns: int
     n_joined_cns: int
     shuffle_rows: int
@@ -108,6 +116,10 @@ class FCTResponse:
     #                              imbalance (max/mean; the balance pass's
     #                              target metric — ``imbalance`` above is over
     #                              LPT's estimated task costs)
+    #: which finalize ran: ``"host"`` (full histogram transferred, top-k
+    #: sliced in numpy) or ``"device_topk"`` (the fct_topk program returned
+    #: O(k) candidates; ``all_freqs`` is None)
+    finalize: str = "host"
 
     def topk(self) -> List[Tuple[str, int]]:
         """(term, freq) pairs with zero-frequency tail dropped."""

@@ -52,7 +52,8 @@ from repro.runtime.store import RelationStore
 _ENGINE_COUNTERS = ("hits", "misses", "traces", "evictions",
                     "batches_run", "cns_run", "bytes_shipped",
                     "column_bytes_shipped", "store_uploads", "store_hits",
-                    "store_upload_bytes")
+                    "store_upload_bytes", "device_to_host_bytes",
+                    "groups_pruned", "pruned_rows")
 
 
 @dataclasses.dataclass
@@ -83,6 +84,21 @@ class SessionConfig:
     store_max_bytes: Optional[int] = None  # byte budget for the session's
                                         # device-resident relation store
                                         # (None = unbounded)
+    device_topk: bool = False           # finalize single-query dispatches
+                                        # with the fct_topk program: the
+                                        # histogram stays device-resident and
+                                        # only O(k) candidates transfer.
+                                        # Responses carry all_freqs=None
+                                        # (finalize="device_topk"); requests
+                                        # needing the histogram set
+                                        # need_histogram=True.  Multi-query
+                                        # stacked batches keep the host path
+    topk_prune: str = "zero"            # cross-CN-group pruning on the topk
+                                        # path: "off", "zero" (bit-exact,
+                                        # skip provably-empty groups) or
+                                        # "threshold" (set-exact counts-
+                                        # lower-bound suffix cut; opt-in) —
+                                        # see FCTEngine.dispatch_topk
 
 
 @dataclasses.dataclass
@@ -118,8 +134,12 @@ class _InFlight:
     pending: Optional[list]
     individual: bool
     n_plans: int
-    engine_delta: Dict[str, int]
+    #: engine/store counter snapshot taken before dispatch; the per-response
+    #: delta is computed after collection, so transfer-side counters
+    #: (device_to_host_bytes) are attributed to the query too
+    engine_before: Dict[str, int]
     dispatch_ms: float
+    topk: Optional[object] = None       # TopkPending on the device-topk path
 
 
 class FCTSession:
@@ -181,6 +201,17 @@ class FCTSession:
         self._plan_cache: LruDict = LruDict(
             self.config.plan_cache_size if self.config.plan_cache_size > 0
             else None)  # unreachable when 0: _plan short-circuits
+        if self.config.topk_prune not in ("off", "zero", "threshold"):
+            raise ValueError(
+                "topk_prune must be 'off', 'zero' or 'threshold', got "
+                f"{self.config.topk_prune!r}")
+        # device-topk path state: the stop/PAD exclusion vector is uploaded
+        # once per session; map-only (single-relation CN) histograms are
+        # uploaded once per plan-cache key and dropped by invalidate()
+        self._excl_dev = None
+        self._hf_dev: LruDict = LruDict(
+            self.config.plan_cache_size if self.config.plan_cache_size > 0
+            else 8)
         self._plan_lock = threading.Lock()    # planner thread vs sync query()
         self._engine_lock = threading.Lock()  # sync query() vs pipeline
         self._pipeline_lock = threading.Lock()  # lazy init vs close()
@@ -345,6 +376,33 @@ class FCTSession:
                              imbalance=imbalance, row_imbalance=row_imb,
                              plan_ms=plan_ms)
 
+    def _host_freq_device(self, planned: _PlannedQuery):
+        """Device-resident copy of a planned query's map-only histogram, or
+        None when it is all zeros.  Uploaded once per plan-cache key in the
+        engine's aggregation layout and accumulation dtype (the device-topk
+        path adds it to the group total on device), reused across warm
+        repeats and epoch-fenced like every data-derived cache."""
+        hf = planned.host_freq
+        if not hf.any():
+            return None
+        req = planned.request
+        key = (planned.keywords, req.r_max, req.mode, req.rho,
+               req.sample_frac, req.salt, self.accum_policy.name)
+        arr = self._hf_dev.hit(key)
+        if arr is not None:
+            return arr
+        epoch = self._data_epoch
+        acc = np.int64 if self.accum_policy.bits == 64 else np.int32
+        cast = hf.astype(acc)
+        # wrap check at upload time: a map-only total past the policy width
+        # would poison the device sum silently (same best-effort negative
+        # check as host collection)
+        self.accum_policy.check_totals(cast)
+        arr = self.engine.vocab_device_vector(cast, self.mesh, acc)
+        if self._data_epoch == epoch:  # invalidated mid-upload: serve once,
+            self._hf_dev.put(key, arr)  # cache nothing stale
+        return arr
+
     def _engine_snapshot(self) -> Dict[str, int]:
         st = dict(self.engine.stats())
         st.update(self.store.stats())
@@ -354,29 +412,29 @@ class FCTSession:
         after = self._engine_snapshot()
         return {k: after[k] - before[k] for k in _ENGINE_COUNTERS}
 
-    def _finish(self, planned: _PlannedQuery, freq: np.ndarray,
-                engine_stats: Dict[str, int], plan_ms: float,
-                dispatch_ms: float, collect_ms: float) -> FCTResponse:
-        t0 = time.perf_counter()
-        t0_ns = time.perf_counter_ns()
-        req = planned.request
-        freq[PAD_ID] = 0
-        ids, f = topk_terms(freq, planned.keywords, req.top_k, self.stop_mask)
+    def _decode_terms(self, ids: np.ndarray) -> List[str]:
         if self.tokenizer is not None:
-            terms = [self.tokenizer.decode(t) for t in ids]
-        else:
-            terms = [f"<{int(t)}>" for t in ids]
-        # _finish runs on finalizer, flush-pool and sync-caller threads
-        # concurrently — the registry-owned counter never loses updates
+            return [self.tokenizer.decode(t) for t in ids]
+        return [f"<{int(t)}>" for t in ids]
+
+    def _respond(self, planned: _PlannedQuery, *, terms, ids, f, all_freqs,
+                 finalize: str, engine_stats: Dict[str, int],
+                 plan_ms: float, dispatch_ms: float, collect_ms: float,
+                 t0: float, t0_ns: int) -> FCTResponse:
+        """Shared response assembly of both finalize paths."""
+        req = planned.request
+        # responses are built on finalizer, flush-pool and sync-caller
+        # threads concurrently — the registry-owned counter never loses
+        # updates
         self._c_queries.inc()
         finalize_ms = (time.perf_counter() - t0) * 1e3
         if planned.trace is not None:
             planned.trace.add_span("finalize", t0_ns,
                                    time.perf_counter_ns() - t0_ns,
-                                   top_k=req.top_k)
+                                   top_k=req.top_k, finalize=finalize)
         execute_ms = dispatch_ms + collect_ms + finalize_ms
         return FCTResponse(
-            terms=terms, term_ids=ids, freqs=f, all_freqs=freq,
+            terms=terms, term_ids=ids, freqs=f, all_freqs=all_freqs,
             n_cns=planned.n_cns, n_joined_cns=len(planned.plans),
             shuffle_rows=planned.shuffle_rows,
             shuffle_bytes=planned.shuffle_bytes,
@@ -391,7 +449,40 @@ class FCTSession:
             engine_stats=engine_stats,
             cold=engine_stats.get("traces", 0) > 0,
             accum_policy=self.accum_policy.name,
+            finalize=finalize,
             request=req, trace=planned.trace)
+
+    def _finish(self, planned: _PlannedQuery, freq: np.ndarray,
+                engine_stats: Dict[str, int], plan_ms: float,
+                dispatch_ms: float, collect_ms: float) -> FCTResponse:
+        t0 = time.perf_counter()
+        t0_ns = time.perf_counter_ns()
+        req = planned.request
+        freq[PAD_ID] = 0
+        ids, f = topk_terms(freq, planned.keywords, req.top_k, self.stop_mask)
+        return self._respond(planned, terms=self._decode_terms(ids), ids=ids,
+                             f=f, all_freqs=freq, finalize="host",
+                             engine_stats=engine_stats, plan_ms=plan_ms,
+                             dispatch_ms=dispatch_ms, collect_ms=collect_ms,
+                             t0=t0, t0_ns=t0_ns)
+
+    def _finish_topk(self, planned: _PlannedQuery, ids: np.ndarray,
+                     counts: np.ndarray, engine_stats: Dict[str, int],
+                     plan_ms: float, dispatch_ms: float,
+                     collect_ms: float) -> FCTResponse:
+        """Device-topk finalize: the engine already excluded PAD/stop/
+        keyword bins and tie-broke by term id on device — slice the O(k)
+        candidates to the requested k and decode.  ``all_freqs`` is None:
+        the histogram never reached the host."""
+        t0 = time.perf_counter()
+        t0_ns = time.perf_counter_ns()
+        k_out = min(planned.request.top_k, self.schema.vocab_size)
+        ids, f = ids[:k_out], counts[:k_out]
+        return self._respond(planned, terms=self._decode_terms(ids), ids=ids,
+                             f=f, all_freqs=None, finalize="device_topk",
+                             engine_stats=engine_stats, plan_ms=plan_ms,
+                             dispatch_ms=dispatch_ms, collect_ms=collect_ms,
+                             t0=t0, t0_ns=t0_ns)
 
     def _dispatch_planned(self, planned: Sequence[_PlannedQuery]) -> _InFlight:
         """Enqueue the device work of one or more planned queries (async).
@@ -405,6 +496,15 @@ class FCTSession:
         """
         planned = list(planned)
         individual = len(planned) > 1
+        # single-query dispatches on a device_topk session finalize on
+        # device: O(k) candidates transfer instead of the histogram.
+        # Multi-query stacked batches keep the host path (per-CN outputs
+        # must be attributed across queries), as do requests that need the
+        # full histogram (gateway result-cache fills) and plan-less
+        # (map-only) queries
+        use_topk = (self.config.device_topk and not individual
+                    and bool(planned[0].plans)
+                    and not planned[0].request.need_histogram)
         owners: List[int] = []
         all_plans: List[CNPlan] = []
         for qi, p in enumerate(planned):
@@ -414,8 +514,25 @@ class FCTSession:
         t0_ns = time.perf_counter_ns()
         with self._engine_lock:
             before = self._engine_snapshot()
-            pending = None
-            if all_plans:
+            pending = topk = None
+            if use_topk:
+                p0 = planned[0]
+                if self._excl_dev is None:
+                    mask = np.zeros((self.schema.vocab_size,), np.int8)
+                    mask[PAD_ID] = 1
+                    if self.stop_mask is not None:
+                        mask[self.stop_mask] = 1
+                    self._excl_dev = self.engine.vocab_device_vector(
+                        mask, self.mesh, np.int8)
+                with maybe_activate(p0.trace):
+                    topk = self.engine.dispatch_topk(
+                        p0.plans, self.mesh, p0.request.top_k,
+                        keywords=p0.keywords, excl=self._excl_dev,
+                        host_extra=self._host_freq_device(p0),
+                        histogram_backend=self.config.histogram_backend,
+                        store=self.store, accum=self.accum_policy,
+                        prune=self.config.topk_prune)
+            elif all_plans:
                 # relation columns come from the session's device-resident
                 # store: the first dispatch over a tuple set uploads its
                 # columns, every later one — warm repeats, pipelined
@@ -428,37 +545,47 @@ class FCTSession:
                         all_plans, self.mesh, self.config.histogram_backend,
                         individual=individual, store=self.store,
                         accum=self.accum_policy)
-            delta = self._engine_delta(before)
         dispatch_ms = (time.perf_counter() - t0) * 1e3
         dur_ns = time.perf_counter_ns() - t0_ns
-        n_groups = len(pending) if pending is not None else 0
+        n_groups = len(pending) if pending is not None else (
+            topk.groups_run if topk is not None else 0)
         for p in planned:
             if p.trace is not None:
                 p.trace.add_span("dispatch", t0_ns, dur_ns,
                                  n_groups=n_groups, shared=individual)
         return _InFlight(planned=planned, owners=np.asarray(owners, np.int64),
                          pending=pending, individual=individual,
-                         n_plans=len(all_plans), engine_delta=delta,
-                         dispatch_ms=dispatch_ms)
+                         n_plans=len(all_plans), engine_before=before,
+                         dispatch_ms=dispatch_ms, topk=topk)
 
     def _finalize(self, flight: _InFlight) -> List[FCTResponse]:
         """Block on the device results and build the responses."""
         t0 = time.perf_counter()
         t0_ns = time.perf_counter_ns()
         vocab = self.schema.vocab_size
-        per_plan = total = None
-        if flight.pending is not None:
+        per_plan = total = topk_ids = topk_counts = None
+        if flight.topk is not None:
+            topk_ids, topk_counts = self.engine.collect_topk(flight.topk)
+        elif flight.pending is not None:
             if flight.individual:
                 per_plan = self.engine.collect_individual(
                     flight.pending, flight.n_plans, vocab)
             else:
                 total = self.engine.collect_total(flight.pending, vocab)
+        # the counter delta is taken after collection so the transfer-side
+        # counters (device_to_host_bytes) land in this query's stats
+        delta = self._engine_delta(flight.engine_before)
         collect_ms = (time.perf_counter() - t0) * 1e3
         dur_ns = time.perf_counter_ns() - t0_ns
         for p in flight.planned:
             if p.trace is not None:
                 p.trace.add_span("collect", t0_ns, dur_ns,
                                  shared=flight.individual)
+        if flight.topk is not None:
+            p = flight.planned[0]
+            return [self._finish_topk(p, topk_ids, topk_counts, delta,
+                                      p.plan_ms, flight.dispatch_ms,
+                                      collect_ms)]
         out = []
         for qi, p in enumerate(flight.planned):
             if p.plans:
@@ -468,7 +595,7 @@ class FCTSession:
                     freq = p.host_freq + total
             else:  # copy: host_freq may be shared via the plan cache
                 freq = p.host_freq.copy()
-            out.append(self._finish(p, freq, flight.engine_delta,
+            out.append(self._finish(p, freq, delta,
                                     p.plan_ms, flight.dispatch_ms,
                                     collect_ms))
         return out
@@ -544,9 +671,11 @@ class FCTSession:
         depend only on shapes.  Returns the drop counts."""
         with self._plan_lock:
             dropped = {"tuple_sets": len(self._tuple_sets),
-                       "plans": len(self._plan_cache)}
+                       "plans": len(self._plan_cache),
+                       "host_freq_dev": len(self._hf_dev)}
             self._tuple_sets.clear()
             self._plan_cache.clear()
+            self._hf_dev.clear()  # device map-only histograms are data too
             self._data_epoch += 1   # fence in-flight builds (see _plan /
             #                         _get_tuple_sets): their puts are dropped
             # drop the device store INSIDE the same lock: a replan against

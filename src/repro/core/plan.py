@@ -36,6 +36,7 @@ from repro.core.shares import optimize_shares
 from repro.core.skew import (Schedule, choose_rho, estimate_task_costs,
                              lpt_schedule, round_robin_schedule,
                              row_imbalance)
+from repro.core.star import cn_volume_mass
 from repro.data.schema import PAD_ID, StarSchema
 
 
@@ -182,6 +183,10 @@ class CNPlan:
     shuffle_bytes: int          # int32 payload bytes (keys + text)
     rho: int = 1                # effective over-decomposition factor used
     device_rows: Optional[np.ndarray] = None  # int64 [P] routed fact rows
+    #: upper bound on max_w freq_CN(w): the CN's total volume-weighted token
+    #: mass (``core.star.cn_volume_mass``).  inf = unknown (never pruned);
+    #: 0.0 = provably contributes nothing, safe to skip bit-exactly.
+    contrib_bound: float = float("inf")
 
     @property
     def n_devices(self) -> int:
@@ -356,4 +361,5 @@ def build_cn_plan(schema: StarSchema, ts: TupleSets, cn: StarCN,
                   key_domains={i: schema.key_domain(i) for i in inc},
                   vocab_size=schema.vocab_size,
                   shuffle_rows=shuffle_rows, shuffle_bytes=shuffle_bytes,
-                  rho=rho_eff, device_rows=device_rows)
+                  rho=rho_eff, device_rows=device_rows,
+                  contrib_bound=cn_volume_mass(schema, ts, cn))

@@ -129,6 +129,53 @@ def star_cn_frequencies(schema: StarSchema, ts: TupleSets,
     return freq
 
 
+def cn_volume_mass(schema: StarSchema, ts: TupleSets, cn: StarCN) -> float:
+    """Total volume-weighted token mass of a CN: Σ_{w != PAD} freq_CN(w).
+
+    The same num-array/volume pass as :func:`star_cn_frequencies`, collapsed
+    over the vocab axis — O(rows·(m+L)) with no histogram.  Every per-term
+    frequency is nonnegative, so the mass upper-bounds ``max_w freq_CN(w)``
+    and is zero iff the CN contributes nothing to any (non-PAD) term; the
+    runtime uses it as the cross-CN-group threshold-pruning bound (the
+    bounding trick of "Computing n-Gram Statistics in MapReduce").  float64
+    on purpose: a bound needs monotonicity, not bit-exactness — except at
+    zero, where products of nonnegative integers are exactly 0.0 iff a
+    factor is zero.
+    """
+    fact_idx, dim_idx = ts.cn_rows(cn)
+    if fact_idx is None:
+        (i, rows), = dim_idx.items()
+        return float(np.count_nonzero(schema.dims[i].text[rows] != PAD_ID))
+    if len(dim_idx) == 0:
+        return float(np.count_nonzero(schema.fact.text[fact_idx] != PAD_ID))
+    inc = sorted(dim_idx)
+    nums = []
+    for i in inc:
+        dom = schema.key_domain(i)
+        keys = schema.dim_keys(i)[dim_idx[i]]
+        nums.append(np.bincount(keys, minlength=dom).astype(np.float64))
+    fkeys = [schema.fact_keys(i)[fact_idx] for i in inc]
+    per_dim_num = [nums[p][fkeys[p]] for p in range(len(inc))]
+    vol_fact = np.ones(len(fact_idx), np.float64)
+    for v in per_dim_num:
+        vol_fact *= v
+    fact_tokens = (schema.fact.text[fact_idx] != PAD_ID).sum(axis=1)
+    mass = float(vol_fact @ fact_tokens.astype(np.float64))
+    for p, i in enumerate(inc):
+        others = np.ones(len(fact_idx), np.float64)
+        for q in range(len(inc)):
+            if q != p:
+                others *= per_dim_num[q]
+        dom = schema.key_domain(i)
+        vol_by_key = np.zeros((dom,), np.float64)
+        np.add.at(vol_by_key, fkeys[p], others)
+        rows = dim_idx[i]
+        w = vol_by_key[schema.dim_keys(i)[rows]]
+        dim_tokens = (schema.dims[i].text[rows] != PAD_ID).sum(axis=1)
+        mass += float(w @ dim_tokens.astype(np.float64))
+    return mass
+
+
 def topk_terms(freq: np.ndarray, keywords: Sequence[int], k: int,
                stop_mask: np.ndarray | None = None):
     """Def. 6: top-k terms by frequency, excluding q (and stopwords/PAD)."""

@@ -47,6 +47,7 @@ is retired along with the forced int64 ref fallback).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -54,19 +55,28 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.accum import AccumPolicy
 from repro.core.plan import CNPlan
 from repro.obs import default_registry
 from repro.obs import span as obs_span
-from repro.runtime.batch import (PlanSignature, group_plan_indices,
+from repro.runtime.batch import (BUCKET_MIN, PlanSignature, RelationSig,
+                                 bucket_pow2, group_plan_indices,
                                  pad_cn_axis, plan_signature, stack_group,
                                  x64_flag)
 from repro.runtime.cache import ExecutableCache, default_cache
 
 
 CN_BUCKET_MIN = 4  # floor for bucketing the per-CN-output programs' N axis
+TOPK_BUCKET_MIN = 16  # floor for bucketing the fct_topk family's k axis
+KW_BUCKET_MIN = 8  # floor for padding the keyword-exclusion id vector
+
+#: structural filler for the fct_topk family's PlanSignature: the finalize
+#: program reads no relations (its input is the already-aggregated
+#: histogram), but the signature type is shared with the histogram families,
+#: so the relation slot carries one fixed minimal shape.
+_TOPK_REL = RelationSig(rows=BUCKET_MIN, cap=BUCKET_MIN, text_len=BUCKET_MIN)
 
 
 def vocab_padded(vocab: int, n_devices: int) -> int:
@@ -201,6 +211,115 @@ def _build_store_fn(sig: PlanSignature, mesh: Mesh, histogram_backend: str,
                      check_rep=False)
 
 
+def topk_signature(vocab: int, n_devices: int, accum: AccumPolicy,
+                   k: int) -> PlanSignature:
+    """Signature of the ``fct_topk`` finalize program for a top-``k``
+    request.  ``k_bucket`` rounds ``k + 1`` up to a power of two (floor
+    ``TOPK_BUCKET_MIN``): the ``+1`` keeps the (k+1)-th count in the
+    candidate set — the threshold the pruning loop compares remaining group
+    bounds against — and bucketing lets nearby k share one executable."""
+    return PlanSignature(n_devices=n_devices, vocab=vocab, fact=_TOPK_REL,
+                         dims=(), accum=accum,
+                         k_bucket=bucket_pow2(k + 1, TOPK_BUCKET_MIN))
+
+
+def k_effective(sig: PlanSignature) -> int:
+    """Candidates the finalize program returns: ``k_bucket`` clamped to the
+    vocab (a top-k past the vocab size is just the whole excluded vocab)."""
+    return min(sig.k_bucket, sig.vocab)
+
+
+def keyword_ids_array(keywords: Sequence[int]) -> np.ndarray:
+    """Keyword-exclusion ids as int32, ``-1``-padded to a pow-2 width (the
+    width rides the executable-cache key): ``-1`` never equals a vocab id,
+    so pad slots exclude nothing."""
+    kw_pad = bucket_pow2(max(len(keywords), 1), KW_BUCKET_MIN)
+    out = np.full((kw_pad,), -1, np.int32)
+    if len(keywords):
+        out[:len(keywords)] = list(keywords)
+    return out
+
+
+def _build_topk_fn(sig: PlanSignature, mesh: Mesh, reduce_scatter: bool,
+                   kw_pad: int):
+    """shard_map finalize program of the ``fct_topk`` family.
+
+    Input is the device-resident aggregated histogram (vocab-sharded
+    ``P("w")`` under reduce-scatter, replicated otherwise) plus the keyword
+    ids and an int8 stop/PAD exclusion vector in the same layout.  Each
+    device:
+
+      1. flags wrap-around (any negative bin) BEFORE exclusions — the
+         INT32_CHECKED overflow check moves on device, so the host never
+         has to read the O(vocab) histogram to enforce it,
+      2. zeroes excluded bins (keywords by id equality, stopwords/PAD via
+         the mask), matching the host oracle which zeroes before slicing,
+         and sets reduce-scatter vocab-pad bins to ``-1`` so they sort
+         strictly below every real (nonnegative, post-exclusion) bin,
+      3. takes its local ``lax.top_k`` — O(k) candidates per device,
+      4. ``all_gather``s the (count, id) candidates over the SMALL k axis
+         (never the vocab axis) and re-``top_k``s the ``P * shard_k``
+         candidates down to ``k_eff``.
+
+    Tie-breaking is deterministic and equal to the host oracle's stable
+    ``argsort(-f)``: ``lax.top_k`` prefers the lower index on equal values,
+    shard-local indices map to ascending global ids, and the device-major
+    ``all_gather`` concatenation keeps ids ascending within each count — so
+    the winner of any tie is always the lowest term id, at every P.
+
+    Replicated inputs (psum aggregation / P=1) skip the gather entirely:
+    every device already holds all vocab bins, and gathering would
+    duplicate each candidate P times.
+    """
+    vocab, n_dev = sig.vocab, sig.n_devices
+    vp = vocab_padded(vocab, n_dev) if reduce_scatter else vocab
+    shard = vp // n_dev if reduce_scatter else vocab
+    k_eff = k_effective(sig)
+    shard_k = min(k_eff, shard)
+    acc = sig.accum.dtype
+
+    def device_fn(hist, kw, excl):
+        # hist [shard] acc · kw [kw_pad] int32 (-1 pads) · excl [shard] int8
+        wrapped = jnp.any(hist < 0).astype(jnp.int32)
+        ids = jnp.arange(shard, dtype=jnp.int32)
+        if reduce_scatter:
+            ids = ids + lax.axis_index("w").astype(jnp.int32) * shard
+        is_kw = jnp.any(ids[:, None] == kw[None, :], axis=1)
+        h = jnp.where(is_kw | (excl != 0), jnp.zeros((), acc), hist)
+        if vp != vocab:
+            h = jnp.where(ids >= vocab, -jnp.ones((), acc), h)
+        v, local = lax.top_k(h, shard_k)
+        cand = ids[local]
+        if not reduce_scatter:
+            return v[:k_eff], cand[:k_eff], wrapped
+        av = lax.all_gather(v, "w", tiled=True)        # [P * shard_k]
+        ai = lax.all_gather(cand, "w", tiled=True)
+        aw = lax.all_gather(wrapped[None], "w", tiled=True)
+        fv, pos = lax.top_k(av, k_eff)
+        return fv, ai[pos], jnp.max(aw)
+
+    hist_spec = P("w") if reduce_scatter else P()
+    return shard_map(device_fn, mesh=mesh,
+                     in_specs=(hist_spec, P(), hist_spec),
+                     out_specs=(P(), P(), P()), check_rep=False)
+
+
+@dataclasses.dataclass
+class TopkPending:
+    """Pending handle of :meth:`FCTEngine.dispatch_topk`: lazy O(k) device
+    outputs plus the pruning ledger.  Block via
+    :meth:`FCTEngine.collect_topk`."""
+
+    counts: object        # lazy [k_eff] device array, policy dtype
+    ids: object           # lazy [k_eff] int32 global term ids
+    wrapped: object       # lazy scalar int32 overflow flag
+    k_eff: int
+    vocab: int
+    groups_run: int
+    groups_pruned: int
+    pruned_rows: int
+
+
 class FCTEngine:
     """Query execution runtime: shape-bucketed compile cache + batched
     multi-CN dispatch.
@@ -239,6 +358,9 @@ class FCTEngine:
         self._c_bytes = self.metrics.counter("engine.bytes_shipped")
         self._c_column_bytes = self.metrics.counter(
             "engine.column_bytes_shipped")
+        self._c_d2h = self.metrics.counter("engine.device_to_host_bytes")
+        self._c_groups_pruned = self.metrics.counter("engine.groups_pruned")
+        self._c_pruned_rows = self.metrics.counter("engine.pruned_rows")
 
     # legacy attribute views over the registry-owned counters
     @property
@@ -256,6 +378,10 @@ class FCTEngine:
     @property
     def column_bytes_shipped(self) -> int:
         return self._c_column_bytes.value
+
+    @property
+    def device_to_host_bytes(self) -> int:
+        return self._c_d2h.value
 
     def _group(self, plans: Sequence[CNPlan],
                accum: Optional[AccumPolicy] = None
@@ -346,9 +472,9 @@ class FCTEngine:
         self._c_cns.inc(len(group))
         return out
 
-    @staticmethod
-    def _collect(lazy) -> np.ndarray:
+    def _collect(self, lazy) -> np.ndarray:
         raw = np.asarray(lazy)
+        self._c_d2h.inc(raw.nbytes)
         # the dtype IS the policy on the collection side: int32 results were
         # accumulated under INT32_CHECKED, whose contract is to fail loudly
         # on wrap-around instead of returning silently wrong counts
@@ -407,6 +533,154 @@ class FCTEngine:
             out[idxs] = self._collect(lazy)[:len(idxs), :vocab]
         return out
 
+    def vocab_device_vector(self, vec: np.ndarray, mesh: Mesh,
+                            dtype) -> jax.Array:
+        """Upload a host ``[vocab]`` vector in the engine's aggregation
+        layout — the layout group outputs arrive in: vocab-sharded
+        ``P("w")`` zero-padded to a multiple of P under reduce-scatter,
+        replicated otherwise — so the caller can add it to (or feed it
+        beside) device-resident histograms.  Counted as shipped bytes."""
+        rs = self.reduce_scatter and mesh.size > 1
+        arr = vec.astype(dtype, copy=True)
+        if rs:
+            vp = vocab_padded(len(arr), mesh.size)
+            if vp != len(arr):
+                arr = np.pad(arr, (0, vp - len(arr)))
+            sharding = NamedSharding(mesh, P("w"))
+        else:
+            sharding = NamedSharding(mesh, P())
+        self._c_bytes.inc(arr.nbytes)
+        return jax.device_put(arr, sharding)
+
+    @staticmethod
+    def _plan_rows(plans: Sequence[CNPlan], idxs: Sequence[int]) -> int:
+        """Total routed fact rows of a set of plans (pruning ledger)."""
+        return int(sum(int(plans[i].device_rows.sum()) for i in idxs
+                       if plans[i].device_rows is not None))
+
+    def dispatch_topk(self, plans: Sequence[CNPlan], mesh: Mesh, k: int, *,
+                      keywords: Sequence[int] = (), excl=None,
+                      host_extra=None, histogram_backend: str = "auto",
+                      store=None, accum: Optional[AccumPolicy] = None,
+                      prune: str = "zero") -> TopkPending:
+        """Async top-k run: dispatch every signature group, keep the
+        aggregated histogram DEVICE-RESIDENT (group outputs are summed with
+        eager sharded adds, never transferred), and finalize with the
+        ``fct_topk`` program — the pending handle resolves to O(k)
+        candidates, not the O(vocab) histogram.
+
+        ``prune`` is the cross-CN-group pruning mode, bounding each group's
+        maximum possible contribution by its plans' total volume-weighted
+        token mass (``CNPlan.contrib_bound``, computed from the same
+        routing volumes that fill ``device_rows``):
+
+        * ``"off"`` — dispatch every group.
+        * ``"zero"`` (default) — skip groups whose summed bound is exactly
+          0.0: they provably contribute nothing to any term, so results
+          stay bit-identical to the unpruned path.
+        * ``"threshold"`` — additionally process groups in descending
+          bound order and, after each, probe the running k-th and (k+1)-th
+          counts (an O(k) transfer); once ``θ_k > θ_{k+1} + Σ remaining
+          bounds``, no remaining group can displace any current top-k term
+          and the whole suffix is skipped.  The top-k SET is exact; the
+          reported counts/order are those of the processed prefix (lower
+          bounds), which is why this mode is opt-in.
+
+        ``keywords`` and ``excl`` (an int8 stop/PAD mask from
+        :meth:`vocab_device_vector`) reproduce the host oracle's exclusions
+        on device; ``host_extra`` is an optional device-resident histogram
+        in the same layout added to the group total — sessions use it for
+        map-only single-relation CNs, which have no routed plans.
+        """
+        if not plans:
+            raise ValueError("dispatch_topk needs at least one plan")
+        if prune not in ("off", "zero", "threshold"):
+            raise ValueError(f"unknown prune mode {prune!r}")
+        vocab = plans[0].vocab_size
+        rs = self.reduce_scatter and mesh.size > 1
+        groups = self._group(plans, accum)
+        sig0 = groups[0][0]
+        tsig = topk_signature(vocab, sig0.n_devices, sig0.accum, k)
+        kw = keyword_ids_array(keywords)
+        if excl is None:
+            excl = self.vocab_device_vector(np.zeros(vocab, np.int8), mesh,
+                                            np.int8)
+        agg = "rs" if rs else "psum"
+        key = ("fct_topk", tsig, len(kw), mesh, x64_flag(), agg)
+        topk_fn = self.cache.get_or_build(
+            key, lambda: _build_topk_fn(tsig, mesh, rs, len(kw)))
+        self._c_bytes.inc(kw.nbytes)
+
+        bounds = [sum(plans[i].contrib_bound for i in idxs)
+                  for _, idxs in groups]
+        run_list = list(range(len(groups)))
+        g_pruned = rows_pruned = 0
+        if prune != "off":
+            keep = [g for g in run_list if bounds[g] != 0.0]
+            zero = [g for g in run_list if bounds[g] == 0.0]
+            if not keep and host_extra is None and zero:
+                # keep one group so a device histogram exists at all
+                keep, zero = zero[:1], zero[1:]
+            for g in zero:
+                g_pruned += 1
+                rows_pruned += self._plan_rows(plans, groups[g][1])
+            run_list = keep
+        if prune == "threshold":
+            run_list.sort(key=lambda g: -bounds[g])
+
+        total = host_extra
+        groups_run = 0
+        kk = min(k, vocab)
+        for pos, g in enumerate(run_list):
+            sig, idxs = groups[g]
+            lazy = self._dispatch(sig, [plans[i] for i in idxs], mesh,
+                                  histogram_backend, reduce_cns=True,
+                                  store=store)
+            total = lazy if total is None else total + lazy
+            groups_run += 1
+            rest = run_list[pos + 1:]
+            if prune == "threshold" and rest and kk + 1 <= tsig.k_bucket:
+                # O(k) probe of the running counts: prune the suffix once
+                # even its combined mass cannot displace the k-th count
+                head = np.asarray(topk_fn(total, kw, excl)[0])
+                self._c_d2h.inc(head.nbytes)
+                b_rest = sum(bounds[r] for r in rest)
+                if kk < len(head) and \
+                        float(head[kk - 1]) > float(head[kk]) + b_rest:
+                    for r in rest:
+                        g_pruned += 1
+                        rows_pruned += self._plan_rows(plans, groups[r][1])
+                    break
+
+        with obs_span("engine.topk_finalize", k=k, k_eff=k_effective(tsig),
+                      n_groups=len(groups), groups_pruned=g_pruned):
+            counts, ids, wrapped = topk_fn(total, kw, excl)
+        if g_pruned:
+            self._c_groups_pruned.inc(g_pruned)
+            self._c_pruned_rows.inc(rows_pruned)
+        return TopkPending(counts=counts, ids=ids, wrapped=wrapped,
+                           k_eff=k_effective(tsig), vocab=vocab,
+                           groups_run=groups_run, groups_pruned=g_pruned,
+                           pruned_rows=rows_pruned)
+
+    def collect_topk(self, tp: TopkPending
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Block on a :meth:`dispatch_topk` handle:
+        ``(term_ids[k_eff], counts[k_eff])`` int64, exclusion-masked and
+        tie-broken by lowest term id — the O(k) transfer this family
+        exists for.  Raises OverflowError when the device-side wrap flag
+        is set (the INT32_CHECKED contract, checked on device over the
+        full histogram)."""
+        counts = np.asarray(tp.counts)
+        ids = np.asarray(tp.ids)
+        wrapped = np.asarray(tp.wrapped)
+        self._c_d2h.inc(counts.nbytes + ids.nbytes + wrapped.nbytes)
+        if int(wrapped):
+            # same failure contract/message as the host-side wrap check
+            AccumPolicy.for_dtype(counts.dtype).check_totals(
+                np.full((1,), -1, counts.dtype))
+        return ids.astype(np.int64), counts.astype(np.int64)
+
     def run_plans(self, plans: Sequence[CNPlan], mesh: Mesh,
                   histogram_backend: str = "auto", store=None,
                   accum: Optional[AccumPolicy] = None) -> np.ndarray:
@@ -434,11 +708,14 @@ class FCTEngine:
 
     def stats(self) -> dict:
         out = self.cache.stats()
-        batches, cns, shipped, columns = self.metrics.values(
+        (batches, cns, shipped, columns, d2h, g_pruned,
+         rows_pruned) = self.metrics.values(
             self._c_batches, self._c_cns, self._c_bytes,
-            self._c_column_bytes)
+            self._c_column_bytes, self._c_d2h, self._c_groups_pruned,
+            self._c_pruned_rows)
         out.update(batches_run=batches, cns_run=cns, bytes_shipped=shipped,
-                   column_bytes_shipped=columns)
+                   column_bytes_shipped=columns, device_to_host_bytes=d2h,
+                   groups_pruned=g_pruned, pruned_rows=rows_pruned)
         return out
 
 

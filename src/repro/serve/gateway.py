@@ -107,6 +107,12 @@ class _InflightEntry:
     the entry is registered."""
 
     generation: int
+    #: the leader's ``top_k`` when its response may come back histogram-less
+    #: (device-topk lane with the result cache off) — a follower can only
+    #: re-slice a PREFIX of the leader's candidates, so requests with a
+    #: larger k must not attach.  -1 = leader will carry the full histogram,
+    #: any k attaches.
+    leader_top_k: int = -1
     # (future, request, resolved keywords, edge trace, submit perf_counter)
     followers: List[Tuple[Future, FCTRequest, tuple, Trace, float]] = \
         dataclasses.field(default_factory=list)
@@ -131,6 +137,7 @@ class _Lane:
     latency: object = None               # obs.Histogram, gateway.query_latency_ms
     shuffle: object = None               # obs.Counter, gateway.shuffle_bytes
     c_coalesced: object = None           # obs.Counter, gateway.coalesced
+    d2h: object = None                   # obs.Counter, gateway.device_to_host_bytes
 
 
 class Gateway:
@@ -194,7 +201,8 @@ class Gateway:
                     latency=lm.histogram("gateway.query_latency_ms",
                                          buckets=LATENCY_BUCKETS_MS),
                     shuffle=lm.counter("gateway.shuffle_bytes"),
-                    c_coalesced=lm.counter("gateway.coalesced"))
+                    c_coalesced=lm.counter("gateway.coalesced"),
+                    d2h=lm.counter("gateway.device_to_host_bytes"))
             return lane
 
     @staticmethod
@@ -213,8 +221,16 @@ class Gateway:
         planned or dispatched), so that's the one span it records."""
         t0 = time.perf_counter()
         t0_ns = time.perf_counter_ns()
-        freq = master.all_freqs.copy()    # callers may mutate their response
-        ids, f = topk_terms(freq, kws, req.top_k, lane.session.stop_mask)
+        if master.all_freqs is None:
+            # device-topk leader: there is no histogram to re-slice.  The
+            # attach gate guarantees the follower's k <= the leader's, so
+            # its top-k is a prefix of the leader's candidate list
+            freq = None
+            kk = min(req.top_k, len(master.term_ids))
+            ids, f = master.term_ids[:kk].copy(), master.freqs[:kk].copy()
+        else:
+            freq = master.all_freqs.copy()  # callers may mutate their response
+            ids, f = topk_terms(freq, kws, req.top_k, lane.session.stop_mask)
         if lane.session.tokenizer is not None:
             terms = [lane.session.tokenizer.decode(t) for t in ids]
         else:
@@ -251,6 +267,17 @@ class Gateway:
         except BaseException:
             self._c_rejected.inc()
             raise
+        # device-topk routing: with the result cache ON, a dispatch doubles
+        # as the cache fill — force the full-histogram path so later hits
+        # can re-slice any k from the memoized histogram.  With the cache
+        # OFF, uncached top_k-only requests ride the session's O(k) device
+        # finalize untouched.
+        cache_on = self.config.result_cache_ttl_s != 0
+        if (cache_on and lane.session.config.device_topk
+                and not request.need_histogram):
+            request = dataclasses.replace(request, need_histogram=True)
+        topk_lane = (lane.session.config.device_topk
+                     and not request.need_histogram)
         key = self._cache_key(resolved, request)
         # the edge trace: every admitted request gets one, covering the
         # cache lookup here and — on a miss — the batcher window and the
@@ -274,16 +301,23 @@ class Gateway:
         # (generation mismatch): attaching would serve pre-mutation data,
         # so the repeat becomes a fresh leader and replaces the entry (the
         # stale leader still resolves its own followers).
-        entry = _InflightEntry(generation=lane.results.generation)
+        entry = _InflightEntry(generation=lane.results.generation,
+                               leader_top_k=request.top_k if topk_lane
+                               else -1)
         with self._lock:
             cur = lane.inflight.get(key)
-            if cur is not None and cur.generation == lane.results.generation:
+            if (cur is not None
+                    and cur.generation == lane.results.generation
+                    and (cur.leader_top_k < 0
+                         or request.top_k <= cur.leader_top_k)):
                 fut = Future()
                 cur.followers.append((fut, request, resolved, trace,
                                       t_submit))
                 lane.c_coalesced.inc()
                 self._c_submitted.inc()
                 return fut
+            # no attachable leader (none, stale, or a device-topk leader
+            # with a smaller k than ours): become the leader
             lane.inflight[key] = entry
         acquired = []
         try:
@@ -357,6 +391,7 @@ class Gateway:
         resp = inner.result()
         lane.latency.observe((time.perf_counter() - t_submit) * 1e3)
         lane.shuffle.inc(int(resp.shuffle_bytes))
+        lane.d2h.inc(int(resp.engine_stats.get("device_to_host_bytes", 0)))
         # cache a private master FIRST: the caller owns `resp` once the
         # outer future resolves and may mutate its histogram/stats, which
         # must not poison later hits.  `generation` drops the insert when
@@ -364,9 +399,15 @@ class Gateway:
         # the leader's trace — its spans belong to one request, not to the
         # repeats a later hit serves.
         master = dataclasses.replace(
-            resp, all_freqs=resp.all_freqs.copy(),
+            resp,
+            all_freqs=None if resp.all_freqs is None
+            else resp.all_freqs.copy(),
             engine_stats=dict(resp.engine_stats), trace=None)
-        lane.results.put(key, master, generation=entry.generation)
+        if master.all_freqs is not None:
+            # device-topk masters carry no histogram: they can still serve
+            # their coalesced followers (prefix re-slice) but cannot answer
+            # future hits at arbitrary k, so they are never memoized
+            lane.results.put(key, master, generation=entry.generation)
         # coalesced followers re-slice their own top_k from the leader's
         # histogram — each gets a private copy, like a cache hit
         for f, f_req, f_kws, f_trace, f_t_submit in followers:

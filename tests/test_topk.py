@@ -1,0 +1,336 @@
+"""Device-side top-k finalize (the ``fct_topk`` family, PR 9).
+
+Covers: bit-exactness against the host oracle (including crafted ties —
+equal counts resolve to the LOWEST term id on both paths), k > vocab
+clamping, the reduce-scatter vocab pad (multi-device subprocesses use a
+vocab NOT divisible by P, so pad bins existing but never surfacing is
+load-bearing), both accumulation policies, cross-CN-group pruning
+soundness (``zero`` is bit-exact, ``threshold`` is set-exact with
+lower-bound counts), the ``k_bucket`` executable-cache lattice, gateway
+routing, the device-side overflow flag, and repo bytecode hygiene.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.api import FCTRequest, FCTSession, SessionConfig
+from repro.data.tpch import TpchConfig, generate, plant_keywords
+from repro.runtime.cache import ExecutableCache
+from repro.runtime.engine import FCTEngine
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _dataset(vocab=128, skew=0.0, seed=5, frac=0.3, fact_rows=800):
+    cfg = TpchConfig(fact_rows=fact_rows, part_rows=64, supp_rows=48,
+                     order_rows=56, text_len=6, vocab_size=vocab,
+                     seed=seed, skew=skew)
+    kws = [vocab - 3, vocab - 2, vocab - 1]
+    schema = plant_keywords(generate(cfg),
+                            {"PART": [kws[0]], "SUPPLIER": [kws[1]],
+                             "ORDERS": [kws[2]]}, frac=frac)
+    return schema, kws
+
+
+def _pair(schema, prune="zero"):
+    """(host-finalize session, device-topk session) on private engines."""
+    full = FCTSession(schema, engine=FCTEngine(cache=ExecutableCache()))
+    topk = FCTSession(schema, engine=FCTEngine(cache=ExecutableCache()),
+                      config=SessionConfig(device_topk=True,
+                                           topk_prune=prune))
+    return full, topk
+
+
+def _assert_prefix_equal(host, dev):
+    assert np.array_equal(host.term_ids[:len(dev.term_ids)], dev.term_ids)
+    assert np.array_equal(host.freqs[:len(dev.freqs)], dev.freqs)
+
+
+# -- oracle equivalence ------------------------------------------------------
+
+def test_device_topk_matches_host_oracle():
+    schema, kws = _dataset()
+    full, topk = _pair(schema)
+    req = FCTRequest(keywords=tuple(kws), top_k=10)
+    rf, rt = full.query(req), topk.query(req)
+    assert rf.finalize == "host" and rt.finalize == "device_topk"
+    assert rf.all_freqs is not None and rt.all_freqs is None
+    assert len(rt.term_ids) == 10
+    _assert_prefix_equal(rf, rt)
+    # warm repeat stays on the device path and stays exact
+    _assert_prefix_equal(rf, topk.query(req))
+
+
+def test_k_exceeds_vocab_clamps():
+    schema, kws = _dataset(vocab=128)
+    full, topk = _pair(schema)
+    req = FCTRequest(keywords=tuple(kws), top_k=10_000)
+    rf, rt = full.query(req), topk.query(req)
+    # the whole (excluded) vocab, ids ascending within equal counts
+    assert len(rt.term_ids) == 128
+    assert np.array_equal(rf.term_ids[:128], rt.term_ids)
+    assert np.array_equal(rf.freqs[:128], rt.freqs)
+
+
+def test_tie_break_is_lowest_id_like_stable_argsort():
+    """Crafted ties straight through the compiled finalize program: the
+    device must pick the LOWEST term id among equal counts, exactly like
+    the host oracle's stable ``argsort(-f)``."""
+    from repro.core.accum import INT32_CHECKED
+    from repro.core.star import topk_terms
+    from repro.launch.mesh import make_worker_mesh
+    from repro.runtime.engine import (_build_topk_fn, k_effective,
+                                      keyword_ids_array, topk_signature)
+    mesh = make_worker_mesh(1)
+    vocab, k = 50, 8
+    tsig = topk_signature(vocab, 1, INT32_CHECKED, k)
+    fn = _build_topk_fn(tsig, mesh, False, 8)
+    rng = np.random.default_rng(0)
+    hist = rng.integers(0, 4, vocab).astype(np.int32)   # dense small ties
+    hist[[7, 23, 41]] = 9                               # three-way top tie
+    kw = keyword_ids_array([23])                        # 23 excluded
+    excl = np.zeros(vocab, np.int8)
+    excl[0] = 1                                         # PAD
+    counts, ids, wrapped = (np.asarray(x) for x in fn(hist, kw, excl))
+    k_eff = k_effective(tsig)
+    oracle_ids, oracle_f = topk_terms(hist.astype(np.int64), [23], k_eff,
+                                      stop_mask=excl.astype(bool))
+    assert int(wrapped) == 0
+    assert np.array_equal(ids, oracle_ids)
+    assert np.array_equal(counts.astype(np.int64), oracle_f)
+    assert ids[0] == 7 and 23 not in ids                # tie -> lowest id
+
+
+def test_device_wrap_flag_raises_like_host_policy():
+    from repro.core.accum import INT32_CHECKED
+    from repro.launch.mesh import make_worker_mesh
+    from repro.runtime.engine import (TopkPending, _build_topk_fn,
+                                      keyword_ids_array, topk_signature)
+    mesh = make_worker_mesh(1)
+    tsig = topk_signature(50, 1, INT32_CHECKED, 5)
+    fn = _build_topk_fn(tsig, mesh, False, 8)
+    hist = np.ones(50, np.int32)
+    hist[13] = -7                      # wrapped int32 accumulator
+    counts, ids, wrapped = fn(hist, keyword_ids_array([]),
+                              np.zeros(50, np.int8))
+    assert int(np.asarray(wrapped)) == 1
+    tp = TopkPending(counts=counts, ids=ids, wrapped=wrapped, k_eff=16,
+                     vocab=50, groups_run=1, groups_pruned=0, pruned_rows=0)
+    eng = FCTEngine(cache=ExecutableCache())
+    with pytest.raises(OverflowError, match="int32 term totals"):
+        eng.collect_topk(tp)
+
+
+# -- cross-CN-group pruning --------------------------------------------------
+
+def test_zero_prune_is_bit_exact_and_counted():
+    schema, kws = _dataset(skew=1.2, seed=7)
+    off = FCTSession(schema, engine=FCTEngine(cache=ExecutableCache()),
+                     config=SessionConfig(device_topk=True,
+                                          topk_prune="off"))
+    zero = FCTSession(schema, engine=FCTEngine(cache=ExecutableCache()),
+                      config=SessionConfig(device_topk=True,
+                                           topk_prune="zero"))
+    req = FCTRequest(keywords=tuple(kws), top_k=10, r_max=4)
+    ro, rz = off.query(req), zero.query(req)
+    assert np.array_equal(ro.term_ids, rz.term_ids)
+    assert np.array_equal(ro.freqs, rz.freqs)
+    assert ro.engine_stats["groups_pruned"] == 0
+    assert rz.engine_stats["groups_pruned"] >= 1
+    assert rz.engine_stats["pruned_rows"] >= 1
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("skew", [0.0, 1.2])
+def test_zero_prune_soundness_across_workloads(seed, skew):
+    """Property-style sweep: for every sampled skewed/uniform TPC-H
+    workload, the pruned device top-k must equal the host oracle."""
+    schema, kws = _dataset(skew=skew, seed=seed, frac=0.15, fact_rows=400)
+    full, topk = _pair(schema, prune="zero")
+    req = FCTRequest(keywords=tuple(kws), top_k=7, r_max=4)
+    _assert_prefix_equal(full.query(req), topk.query(req))
+
+
+def test_threshold_prune_is_set_exact_with_lower_bound_counts():
+    schema, kws = _dataset(skew=1.2, seed=7)
+    full, topk = _pair(schema, prune="threshold")
+    req = FCTRequest(keywords=tuple(kws), top_k=10, r_max=4)
+    rf, rt = full.query(req), topk.query(req)
+    # the top-k SET is exact; counts are lower bounds of the true counts
+    assert set(rt.term_ids.tolist()) == set(rf.term_ids.tolist())
+    true_freq = rf.all_freqs
+    for tid, f in zip(rt.term_ids, rt.freqs):
+        assert f <= true_freq[tid]
+
+
+def test_contrib_bound_equals_collapsed_frequencies():
+    """``cn_volume_mass`` must equal the star-method frequency vector
+    summed with PAD zeroed — and be exactly 0.0 iff the CN contributes
+    nothing (the bit-exactness guarantee of the zero prune)."""
+    from repro.core.candidate_network import (TupleSets, enumerate_star_cns,
+                                              prune_empty_cns)
+    from repro.core.star import cn_volume_mass, star_cn_frequencies
+    from repro.data.schema import PAD_ID
+    schema, kws = _dataset(skew=1.2, seed=7)
+    ts = TupleSets.build(schema, kws)
+    cns = prune_empty_cns(enumerate_star_cns(len(kws), schema.m, 4), ts)
+    assert cns
+    for cn in cns[:12]:
+        freq = star_cn_frequencies(schema, ts, cn).astype(np.float64)
+        freq[PAD_ID] = 0.0
+        mass = cn_volume_mass(schema, ts, cn)
+        assert mass == pytest.approx(freq.sum(), rel=1e-12)
+        assert (mass == 0.0) == (freq.sum() == 0.0)
+
+
+# -- executable-cache bucketing ----------------------------------------------
+
+def test_k_bucket_shares_executables_across_nearby_k():
+    schema, kws = _dataset()
+    _, topk = _pair(schema)
+    topk.query(FCTRequest(keywords=tuple(kws), top_k=10))
+    traces = topk.engine.cache.traces
+    # 10 and 12 share k_bucket=16: zero new compilations
+    r12 = topk.query(FCTRequest(keywords=tuple(kws), top_k=12))
+    assert topk.engine.cache.traces == traces
+    assert len(r12.term_ids) == 12
+    # 40 buckets to 64: exactly the finalize program retraces
+    topk.query(FCTRequest(keywords=tuple(kws), top_k=40))
+    assert topk.engine.cache.traces == traces + 1
+
+
+# -- serving gateway routing -------------------------------------------------
+
+def test_gateway_routes_uncached_topk_to_device_path():
+    from repro.serve import Gateway, GatewayConfig, SchemaRegistry
+    schema, kws = _dataset()
+    reg = SchemaRegistry()
+    reg.register("t", schema, config=SessionConfig(device_topk=True))
+    gw = Gateway(reg, config=GatewayConfig(result_cache_ttl_s=0))
+    try:
+        resp = gw.query("t", FCTRequest(keywords=tuple(kws), top_k=5))
+        assert resp.finalize == "device_topk"
+        assert resp.all_freqs is None and len(resp.term_ids) == 5
+    finally:
+        gw.close()
+
+
+def test_gateway_cache_fills_force_histogram_and_reslice_any_k():
+    from repro.serve import Gateway, GatewayConfig, SchemaRegistry
+    schema, kws = _dataset()
+    reg = SchemaRegistry()
+    reg.register("t", schema, config=SessionConfig(device_topk=True))
+    gw = Gateway(reg, config=GatewayConfig(result_cache_ttl_s=60.0))
+    try:
+        r1 = gw.query("t", FCTRequest(keywords=tuple(kws), top_k=5))
+        # the cache fill forces the full histogram so hits can re-slice
+        assert r1.finalize == "host" and r1.all_freqs is not None
+        r2 = gw.query("t", FCTRequest(keywords=tuple(kws), top_k=20))
+        assert r2.cache_hit and len(r2.term_ids) == 20
+        oracle = FCTSession(schema,
+                            engine=FCTEngine(cache=ExecutableCache()))
+        ro = oracle.query(FCTRequest(keywords=tuple(kws), top_k=20))
+        assert np.array_equal(r2.term_ids, ro.term_ids)
+        assert np.array_equal(r2.freqs, ro.freqs)
+    finally:
+        gw.close()
+
+
+# -- multi-device bit-identity (subprocesses: XLA_FLAGS precede jax) ---------
+
+SCRIPT = textwrap.dedent("""
+    import os, sys
+    n_dev, x64 = int(sys.argv[1]), sys.argv[2] == "1"
+    os.environ["XLA_FLAGS"] = \\
+        f"--xla_force_host_platform_device_count={n_dev}"
+    if x64:
+        os.environ["JAX_ENABLE_X64"] = "1"
+    import warnings; warnings.filterwarnings("ignore")
+    import hashlib, json
+    import numpy as np
+    import jax
+    from repro.api import FCTRequest, FCTSession, SessionConfig
+    from repro.data.tpch import TpchConfig, generate, plant_keywords
+    from repro.runtime.cache import ExecutableCache
+    from repro.runtime.engine import FCTEngine
+
+    assert len(jax.devices()) == n_dev
+    cfg = TpchConfig(fact_rows=600, part_rows=48, supp_rows=32,
+                     order_rows=40, text_len=6, vocab_size=100,  # 100 % 8 != 0
+                     seed=5, skew=1.2)
+    schema = plant_keywords(generate(cfg), {"PART": [80], "SUPPLIER": [81],
+                                            "ORDERS": [82]}, frac=0.4)
+    req = FCTRequest(keywords=(80, 81, 82), r_max=3, top_k=7)
+    host = FCTSession(schema, engine=FCTEngine(cache=ExecutableCache()))
+    href = host.query(req)
+    out = {"accum": href.accum_policy}
+    for rs in (True, False):
+        s = FCTSession(
+            schema, engine=FCTEngine(cache=ExecutableCache(),
+                                     reduce_scatter=rs),
+            config=SessionConfig(device_topk=True))
+        r = s.query(req)
+        assert r.finalize == "device_topk" and r.all_freqs is None
+        # reduce-scatter pads the vocab to a multiple of P: pad bins must
+        # never surface as candidates
+        assert r.term_ids.min() >= 0 and r.term_ids.max() < 100
+        assert np.array_equal(r.term_ids, href.term_ids[:len(r.term_ids)])
+        assert np.array_equal(r.freqs, href.freqs[:len(r.freqs)])
+        out[f"rs={rs}"] = hashlib.sha256(
+            np.ascontiguousarray(r.term_ids).tobytes()
+            + np.ascontiguousarray(r.freqs).tobytes()).hexdigest()
+    print("RESULT" + json.dumps(out))
+""")
+
+
+def _run(n_devices: int, x64: bool) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    env.pop("JAX_ENABLE_X64", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT, str(n_devices), "1" if x64 else "0"],
+        env=env, capture_output=True, text=True, timeout=600, cwd=_REPO)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT")][0]
+    return json.loads(line[len("RESULT"):])
+
+
+@pytest.fixture(scope="module")
+def results():
+    return {(n, x64): _run(n, x64)
+            for n in (1, 8) for x64 in (False, True)}
+
+
+@pytest.mark.parametrize("x64", [False, True],
+                         ids=["int32-checked", "int64-exact"])
+def test_topk_bit_identical_across_device_counts(results, x64):
+    one, eight = results[(1, x64)], results[(8, x64)]
+    for key in ("rs=True", "rs=False"):
+        assert eight[key] == one[key], f"{key} differs across device counts"
+    assert one["accum"] == ("int64-exact" if x64 else "int32-checked")
+
+
+def test_topk_identical_across_policies_and_aggregations(results):
+    # counts fit int32 here, so every (P, policy, aggregation) combination
+    # must produce the same bytes
+    hashes = {r[key] for r in results.values()
+              for key in ("rs=True", "rs=False")}
+    assert len(hashes) == 1
+
+
+# -- repo hygiene ------------------------------------------------------------
+
+def test_repo_tracks_no_bytecode():
+    out = subprocess.run(["git", "ls-files"], cwd=_REPO,
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    bad = [ln for ln in out.stdout.splitlines()
+           if "__pycache__" in ln or ln.endswith(".pyc")]
+    assert not bad, f"compiled bytecode tracked in git: {bad}"
