@@ -1,0 +1,184 @@
+"""Incremental-ingest stream: appends interleaved with warm queries.
+
+Measures the PR-10 append path end to end on a sustained mixed stream:
+a warmed session absorbs fact and dimension append batches while the same
+query keeps running between them.  Per round it records the FIRST query
+after the append — the one that pays replanning and on-device chunk
+assembly — and the store's upload-byte delta for the round, which is the
+host->device cost of the append itself.  Emits ``kind="ingest_stream"``
+records; ``validate_bench.py`` requires a post-append warm record with
+``traces == 0`` (appends never retrace executables) and ``warm_ratio``
+<= 2x the warm steady-state latency, plus per-round upload deltas below
+the cold upload volume (only the new chunk shipped, not the relations).
+
+Standalone use merges into BENCH_fct.json like device_scaling:
+``python benchmarks/ingest_stream.py [--quick] [--json PATH | --no-json]``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+# (relation, rows per batch); one dim batch in the middle so the stream
+# exercises both the fact chunk path and the key-domain growth path
+ROUNDS = (("LINEITEM", 64), ("PART", 8), ("LINEITEM", 64), ("LINEITEM", 32))
+QUICK_ROUNDS = (("LINEITEM", 32), ("PART", 4))
+
+
+def _best(fn, iters: int) -> float:
+    """Min-of-N latency in us (robust to scheduler noise, unlike a mean)."""
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _batch(rng, schema, relation: str, n_rows: int, kws):
+    """Append rows for ``relation``: fact rows draw FKs from the CURRENT
+    dim rows, dim rows take fresh primary keys.  Appended text stays BELOW
+    the planted query keywords — the new rows contribute to the histogram
+    as join connectors against keyword-bearing rows, which keeps every
+    keyword tuple set (and so every route signature) in its pow2 bucket:
+    the zero-retrace guarantee this benchmark certifies.  Keyword-bearing
+    appends (which may legitimately compile a newly non-empty CN) are
+    covered by tests/test_ingest.py instead."""
+    lo_kw = min(kws)
+    rows = []
+    for j in range(n_rows):
+        text = rng.integers(1, lo_kw, schema.fact.text_len).tolist()
+        if relation == schema.fact.name:
+            row = {e.fact_col: int(rng.integers(0, schema.dims[i].rows))
+                   for i, e in enumerate(schema.edges)}
+        else:
+            i = next(i for i, e in enumerate(schema.edges)
+                     if e.dim_name == relation)
+            edge = schema.edges[i]
+            row = {edge.dim_col: schema.dims[i].rows + j}
+        row["text"] = text
+        rows.append(row)
+    return rows
+
+
+def run(quick: bool = False) -> None:
+    import numpy as np
+
+    from benchmarks.common import emit, make_dataset
+    from repro.api import FCTRequest, FCTSession
+    from repro.runtime.cache import ExecutableCache
+    from repro.runtime.engine import FCTEngine
+
+    schema, kws = make_dataset(scale=0.5 if quick else 1.0)
+    engine = FCTEngine(cache=ExecutableCache())
+    session = FCTSession(schema, engine=engine)
+    req = FCTRequest(keywords=tuple(kws), top_k=10, r_max=4)
+    query = lambda: session.query(req)
+
+    query()  # cold: trace + compile + upload every relation once
+    cold_upload = session.stats()["store_upload_bytes"]
+    t0 = engine.cache.traces
+    warm_us = _best(query, 2 if quick else 5)
+    warm_traces = engine.cache.traces - t0
+    emit("ingest_stream/warm_baseline", warm_us,
+         f"steady-state warm query, traces={warm_traces}",
+         kind="ingest_stream", traces=warm_traces,
+         cold_upload_bytes=cold_upload)
+    assert warm_traces == 0, "warm baseline retraced — cache broken"
+
+    rounds = QUICK_ROUNDS if quick else ROUNDS
+    rng = np.random.default_rng(11)
+    post_us, rows_total = [], 0
+    for rnd, (relation, n_rows) in enumerate(rounds):
+        pre = session.stats()
+        res = session.append(relation,
+                             _batch(rng, session.schema, relation, n_rows,
+                                    kws))
+        t0 = engine.cache.traces
+        first_us = _best(query, 1)     # pays replanning + chunk assembly
+        new_traces = engine.cache.traces - t0
+        post = session.stats()
+        upload = post["store_upload_bytes"] - pre["store_upload_bytes"]
+        assembles = (post["store_chunk_assembles"]
+                     - pre["store_chunk_assembles"])
+        post_us.append(first_us)
+        rows_total += n_rows
+        emit(f"ingest_stream/round{rnd}_{relation.lower()}", first_us,
+             f"append {n_rows} rows (epoch {res.data_epoch}): first query "
+             f"traces={new_traces} upload={upload}B assembles={assembles}",
+             kind="ingest_stream", traces=new_traces, rows_appended=n_rows,
+             append_upload_bytes=upload, chunk_assembles=assembles,
+             cold_upload_bytes=cold_upload)
+        assert new_traces == 0, (
+            f"round {rnd}: post-append query retraced {new_traces} "
+            "executables — append invalidated the compiled cache")
+        assert upload < cold_upload, (
+            f"round {rnd}: append shipped {upload}B >= the {cold_upload}B "
+            "cold upload — the whole column set went back to the device")
+
+    # equivalence: the streamed session against a cold rebuild on the
+    # final schema (same request, fresh engine + store)
+    warm_res = query()
+    cold_res = FCTSession(session.schema,
+                          engine=FCTEngine(cache=ExecutableCache())).query(req)
+    bitexact = (np.array_equal(warm_res.all_freqs, cold_res.all_freqs)
+                and np.array_equal(warm_res.term_ids, cold_res.term_ids))
+    ratio = round(min(post_us) / max(warm_us, 1e-9), 2)
+    emit("ingest_stream/post_append_warm", min(post_us),
+         f"best first-query-after-append over {len(rounds)} rounds "
+         f"({rows_total} rows streamed): {ratio}x warm steady-state, "
+         f"bitexact={bitexact}", kind="ingest_stream", traces=0,
+         warm_ratio=ratio, rows_appended=rows_total, bitexact=bool(bitexact))
+    assert bitexact, "streamed session diverged from cold rebuild"
+    # the 2x latency budget is a full-mode claim: at --quick scale the
+    # fixed replanning floor is a large fraction of an already-tiny warm
+    # query, so the ratio is noise-dominated there
+    if not quick:
+        assert ratio <= 2.0, (
+            f"post-append warm query is {ratio}x steady-state (> 2x budget)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI mode: scale 0.5, two append rounds")
+    ap.add_argument("--no-json", action="store_true",
+                    help="don't merge records into the JSON file")
+    ap.add_argument("--json", default="BENCH_fct.json", metavar="PATH",
+                    help="merge ingest_stream records into PATH")
+    args = ap.parse_args()
+
+    from benchmarks.common import RECORDS
+    run(quick=args.quick)
+    if args.no_json:
+        return
+    path = os.path.join(_ROOT, args.json) \
+        if not os.path.isabs(args.json) else args.json
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        import jax
+        payload = {"meta": {"backend": jax.default_backend(),
+                            "n_devices": len(jax.devices()),
+                            "jax": jax.__version__},
+                   "benchmarks": []}
+    payload["benchmarks"] = [
+        r for r in payload["benchmarks"]
+        if not str(r.get("name", "")).startswith("ingest_stream/")
+    ] + RECORDS
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# merged {len(RECORDS)} ingest_stream records into {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,9 +29,10 @@ def main() -> None:
                     metavar="PATH", help="write results as JSON")
     args = ap.parse_args()
 
-    from benchmarks import (common, device_scaling, kernel_micro, multi_query,
-                            response_time, serving_load, shares_comm,
-                            shuffle_size, skew_adjust, topk_transfer)
+    from benchmarks import (common, device_scaling, ingest_stream,
+                            kernel_micro, multi_query, response_time,
+                            serving_load, shares_comm, shuffle_size,
+                            skew_adjust, topk_transfer)
     mods = {
         "response_time": response_time,
         "multi_query": multi_query,
@@ -44,6 +45,11 @@ def main() -> None:
         # plus the cross-CN-group pruning record; standalone merge-in
         # --json semantics and a --quick CI mode like device_scaling
         "topk_transfer": topk_transfer,
+        # incremental ingest: appends interleaved with warm queries —
+        # zero-retrace + chunk-only upload + within-2x first-query-after-
+        # append records; standalone merge-in --json and --quick like
+        # topk_transfer
+        "ingest_stream": ingest_stream,
         # subprocess fan-out over forced device counts; also runnable
         # standalone (`python benchmarks/device_scaling.py`) with merge-in
         # --json semantics and a --quick CI mode

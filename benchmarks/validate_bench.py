@@ -12,7 +12,12 @@ the executable cache), at least one record measured on more than one
 device (the scale-out curves exist), and the ``kind == "fct_topk"``
 finalize-transfer records: the vocab=32768/k=10 point with a >= 10x
 device->host byte reduction and a pruning record with
-``groups_pruned >= 1`` — both bit-exact against the host oracle.
+``groups_pruned >= 1`` — both bit-exact against the host oracle.  The
+``kind == "ingest_stream"`` append-path records must include one with
+``traces == 0``, ``warm_ratio <= 2.0`` and ``bitexact=true`` (the first
+query after an append retraces nothing and stays within 2x of warm
+steady-state) plus a positive ``append_upload_bytes`` below its round's
+``cold_upload_bytes`` (only the new chunk shipped to the device).
 
 CI runs the full check against the committed BENCH_fct.json (catching PRs
 that regenerate it without the cold/warm instrumentation) and the
@@ -51,6 +56,23 @@ def validate(path: str, records_only: bool = False) -> list:
         if not isinstance(rec.get("mesh"), dict):
             errors.append(f"benchmarks[{i}] ({rec.get('name')}): mesh axis "
                           "sizes missing")
+        if rec.get("kind") == "ingest_stream":
+            tag = f"benchmarks[{i}] ({rec.get('name')})"
+            tr = rec.get("traces")
+            if not (isinstance(tr, int) and tr >= 0):
+                errors.append(f"{tag}: ingest_stream record needs an int "
+                              "traces >= 0 (the zero-retrace evidence)")
+            up = rec.get("append_upload_bytes")
+            if up is not None:
+                cold = rec.get("cold_upload_bytes")
+                if not (isinstance(cold, (int, float)) and cold > 0):
+                    errors.append(f"{tag}: append_upload_bytes without a "
+                                  "positive cold_upload_bytes to compare "
+                                  "against")
+                elif up >= cold:
+                    errors.append(f"{tag}: append shipped {up}B >= the "
+                                  f"{cold}B cold upload — the whole column "
+                                  "set went back to the device")
         if rec.get("kind") == "fct_topk":
             tag = f"benchmarks[{i}] ({rec.get('name')})"
             for field in ("k", "vocab"):
@@ -96,6 +118,21 @@ def validate(path: str, records_only: bool = False) -> list:
                    and r["groups_pruned"] >= 1 for r in topk):
             errors.append("no fct_topk record with groups_pruned >= 1 — "
                           "the cross-CN-group prune never fired")
+        ingest = [r for r in records if r.get("kind") == "ingest_stream"]
+        if not any(r.get("traces") == 0
+                   and isinstance(r.get("warm_ratio"), (int, float))
+                   and r["warm_ratio"] <= 2.0
+                   and r.get("bitexact") is True for r in ingest):
+            errors.append('no ingest_stream record with traces == 0, '
+                          'warm_ratio <= 2.0 and bitexact=true — the '
+                          'post-append warm-query headline (appends never '
+                          'retrace, first query within 2x steady-state) '
+                          'is missing')
+        if not any(isinstance(r.get("append_upload_bytes"), (int, float))
+                   and r["append_upload_bytes"] > 0 for r in ingest):
+            errors.append("no ingest_stream record with a positive "
+                          "append_upload_bytes — the chunk-only upload "
+                          "evidence is missing")
     return errors
 
 

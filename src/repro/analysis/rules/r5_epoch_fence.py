@@ -14,6 +14,12 @@ session/gateway caches must either pass a ``generation=`` keyword (the
 function with a comparison against one of the module's fence names
 (``_data_epoch`` / ``epoch`` / ``generation``) on an earlier line — the
 static shadow of "the insert is dominated by an epoch comparison".
+
+Subscript assignment (``self._cache[key] = value``) into a fenced cache is
+the same insert in different spelling — the incremental-ingest append path
+patches cached tuple sets in place this way — and is held to the same
+standard (no ``generation=`` escape hatch exists for it: only the
+dominating comparison counts).
 """
 from __future__ import annotations
 
@@ -43,23 +49,41 @@ class R5EpochFence(Rule):
     def check(self, ctx: FileContext) -> Iterator[Violation]:
         cache_attrs, fences = EPOCH_FENCED_CACHES[ctx.rel]
         for node in ast.walk(ctx.tree):
-            if not (isinstance(node, ast.Call)
-                    and isinstance(node.func, ast.Attribute)
-                    and node.func.attr == "put"
-                    and isinstance(node.func.value, ast.Attribute)
-                    and node.func.value.attr in cache_attrs):
+            target = self._cache_insert(node, cache_attrs)
+            if target is None:
                 continue
-            if any(kw.arg == "generation" for kw in node.keywords):
+            if (isinstance(node, ast.Call)
+                    and any(kw.arg == "generation" for kw in node.keywords)):
                 continue
             if self._fenced(ctx, node, fences):
                 continue
-            cache = ast.unparse(node.func.value)
             yield ctx.violation(
                 node, self.rule_id,
-                f"insert into {cache} is not dominated by an epoch/"
-                f"generation comparison ({', '.join(fences)}) and passes "
-                f"no generation= — a result computed from pre-mutation "
-                f"data could outlive invalidate()")
+                f"insert into {ast.unparse(target)} is not dominated by an "
+                f"epoch/generation comparison ({', '.join(fences)}) and "
+                f"passes no generation= — a result computed from "
+                f"pre-mutation data could outlive invalidate()")
+
+    @staticmethod
+    def _cache_insert(node: ast.AST, cache_attrs):
+        """The cache expression this node inserts into, or None.
+
+        Two spellings count: ``<cache>.put(...)`` and the append path's
+        in-place patch ``<cache>[key] = value``.
+        """
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "put"
+                and isinstance(node.func.value, ast.Attribute)
+                and node.func.value.attr in cache_attrs):
+            return node.func.value
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if (isinstance(tgt, ast.Subscript)
+                        and isinstance(tgt.value, ast.Attribute)
+                        and tgt.value.attr in cache_attrs):
+                    return tgt.value
+        return None
 
     def _fenced(self, ctx: FileContext, put: ast.Call, fences) -> bool:
         fn = ctx.enclosing_function(put)

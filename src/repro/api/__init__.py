@@ -1,9 +1,9 @@
 """FCT service API: request/response objects and the FCTSession front door
 (sync ``query``, cross-query-batched ``query_batch``, pipelined ``submit``).
 See README.md in this directory for the request lifecycle."""
-from repro.api.request import FCTRequest, FCTResponse
+from repro.api.request import AppendResult, FCTRequest, FCTResponse
 from repro.api.session import FCTSession, SessionConfig
 from repro.core.accum import AccumPolicy
 
-__all__ = ["AccumPolicy", "FCTRequest", "FCTResponse", "FCTSession",
-           "SessionConfig"]
+__all__ = ["AccumPolicy", "AppendResult", "FCTRequest", "FCTResponse",
+           "FCTSession", "SessionConfig"]

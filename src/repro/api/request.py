@@ -120,7 +120,39 @@ class FCTResponse:
     #: sliced in numpy) or ``"device_topk"`` (the fct_topk program returned
     #: O(k) candidates; ``all_freqs`` is None)
     finalize: str = "host"
+    #: the session data epoch this response's histogram reflects: bumped by
+    #: every ``FCTSession.append`` (and ``invalidate``).  A response is
+    #: computed against ONE epoch's snapshot end to end — a query racing an
+    #: append reports either the pre- or post-append epoch, never a mix —
+    #: so callers (and the gateway's patch-up) can tell exactly which data
+    #: state a histogram covers
+    data_epoch: int = 0
 
     def topk(self) -> List[Tuple[str, int]]:
         """(term, freq) pairs with zero-frequency tail dropped."""
         return [(t, int(f)) for t, f in zip(self.terms, self.freqs) if f > 0]
+
+
+@dataclasses.dataclass(frozen=True)
+class AppendResult:
+    """Outcome of one :meth:`repro.api.FCTSession.append` call.
+
+    ``base_rows`` is the relation's row count BEFORE the append — the
+    boundary delta dispatches use to restrict tuple sets to the new chunk.
+    ``data_epoch`` is the session epoch AFTER the append (unchanged when
+    ``rows_appended == 0``: an empty append is a no-op, nothing to fence).
+    ``tuple_sets_patched`` counts cached keyword tuple sets extended in
+    place (one cheap mask pass over the new rows each); ``plans_dropped``
+    counts invalidated routing plans (row routing does change — but CN
+    enumerations, compiled executables and the per-chunk device store
+    survive, which is what keeps post-append queries warm).
+    """
+
+    relation: str
+    role: str                 # "fact" | "dim"
+    dim_index: int            # -1 for the fact
+    base_rows: int
+    rows_appended: int
+    data_epoch: int
+    tuple_sets_patched: int = 0
+    plans_dropped: int = 0

@@ -32,18 +32,19 @@ import dataclasses
 import threading
 import time
 from concurrent.futures import Future
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.api.pipeline import QueryPipeline
-from repro.api.request import FCTRequest, FCTResponse
+from repro.api.request import AppendResult, FCTRequest, FCTResponse
 from repro.core.accum import AccumPolicy
 from repro.core.candidate_network import (StarCN, TupleSets,
                                           enumerate_star_cns, prune_empty_cns)
 from repro.core.plan import CNPlan, build_cn_plan
 from repro.core.star import topk_terms
-from repro.data.schema import PAD_ID, StarSchema, tokens_histogram
+from repro.data.schema import (PAD_ID, StarSchema, keyword_mask,
+                               tokens_histogram)
 from repro.obs import Trace, default_registry, maybe_activate
 from repro.obs import span as obs_span
 from repro.runtime.cache import LruDict
@@ -52,8 +53,40 @@ from repro.runtime.store import RelationStore
 _ENGINE_COUNTERS = ("hits", "misses", "traces", "evictions",
                     "batches_run", "cns_run", "bytes_shipped",
                     "column_bytes_shipped", "store_uploads", "store_hits",
-                    "store_upload_bytes", "device_to_host_bytes",
-                    "groups_pruned", "pruned_rows")
+                    "store_upload_bytes", "store_chunk_assembles",
+                    "device_to_host_bytes", "groups_pruned", "pruned_rows")
+
+
+def _cn_includes(cn: StarCN, role: str, dim_index: int) -> bool:
+    """Does the CN's join tree contain the mutated relation?  A CN that
+    doesn't is untouched by an append — its delta is exactly zero, so the
+    delta dispatch skips it (running it would wrongly re-count its FULL
+    histogram, since its tuple sets carry no append boundary)."""
+    if role == "fact":
+        return cn.single_dim < 0
+    return cn.single_dim == dim_index or (
+        cn.single_dim < 0 and cn.dim_masks[dim_index] is not None)
+
+
+def _delta_tuple_sets(ts: TupleSets, role: str, dim_index: int,
+                      base_rows: int) -> TupleSets:
+    """Tuple sets restricted to the rows appended after ``base_rows``.
+
+    The mutated relation's first ``base_rows`` keyword masks are set to a
+    ``-1`` sentinel that matches no CN label (labels are exact-subset masks
+    ``>= 0``), so every row lookup sees only the new chunk while the OTHER
+    relations keep their full tuple sets — exactly the join terms of
+    freq(base + chunk) - freq(base), which is what makes histogram patch-up
+    by integer addition exact."""
+    if role == "fact":
+        fk = ts.fact_kw.copy()
+        fk[:base_rows] = -1
+        return TupleSets(fact_kw=fk, dim_kw=ts.dim_kw, full=ts.full)
+    dk = list(ts.dim_kw)
+    arr = dk[dim_index].copy()
+    arr[:base_rows] = -1
+    dk[dim_index] = arr
+    return TupleSets(fact_kw=ts.fact_kw, dim_kw=dk, full=ts.full)
 
 
 @dataclasses.dataclass
@@ -118,6 +151,9 @@ class _PlannedQuery:
     trace: Optional[Trace] = None       # per-request span tree; None while
     #                                     the artifact sits in the plan cache
     #                                     (each hit re-binds its own trace)
+    #: session data epoch the plan's tuple sets / schema snapshot belong to;
+    #: stamped onto the response so callers can fence against appends
+    data_epoch: int = 0
 
 
 @dataclasses.dataclass
@@ -221,6 +257,8 @@ class FCTSession:
         self._c_ts_misses = self.metrics.counter("session.tuple_set_misses")
         self._c_plan_hits = self.metrics.counter("session.plan_hits")
         self._c_plan_misses = self.metrics.counter("session.plan_misses")
+        self._c_appends = self.metrics.counter("session.appends")
+        self._c_delta_rows = self.metrics.counter("session.delta_rows")
 
     # legacy attribute views over the registry-owned counters
     @property
@@ -259,19 +297,31 @@ class FCTSession:
                 out.append(int(kw))
         return tuple(out)
 
-    def _get_tuple_sets(self, keywords: Tuple[int, ...]) -> TupleSets:
+    def _get_tuple_sets(
+            self, keywords: Tuple[int, ...]
+    ) -> Tuple[TupleSets, StarSchema, int]:
+        """(tuple sets, schema, data epoch) — one CONSISTENT triple.
+
+        All three are read (or installed) under ``_plan_lock``, the same
+        critical section ``append``/``invalidate`` mutate them in, so the
+        caller plans one epoch's snapshot end to end even while mutations
+        land concurrently: the returned schema is exactly the one the tuple
+        sets were built over.  Schema objects are immutable (``append``
+        REPLACES ``self.schema``; old row arrays are never resized), so a
+        pre-append snapshot stays valid after the session moves on — it is
+        served, its caching is fenced by the epoch."""
         with self._plan_lock:
             ts = self._tuple_sets.hit(keywords)
             if ts is not None:
                 self._c_ts_hits.inc()
-                return ts
-            epoch = self._data_epoch
-        ts = TupleSets.build(self.schema, keywords)  # outside the lock
+                return ts, self.schema, self._data_epoch
+            epoch, schema = self._data_epoch, self.schema
+        ts = TupleSets.build(schema, keywords)  # outside the lock
         self._c_ts_misses.inc()
         with self._plan_lock:
-            if self._data_epoch != epoch:  # invalidated mid-build: serve,
-                return ts                  # but cache nothing stale
-            return self._tuple_sets.put(keywords, ts)
+            if self._data_epoch != epoch:  # mutated mid-build: serve the
+                return ts, schema, epoch   # old snapshot, cache nothing
+            return self._tuple_sets.put(keywords, ts), schema, epoch
 
     def _get_cns(self, n_keywords: int, r_max: int) -> List[StarCN]:
         key = (n_keywords, r_max)
@@ -332,9 +382,12 @@ class FCTSession:
 
     def _plan_resolved(self, req: FCTRequest, kws: Tuple[int, ...],
                        t0: float) -> _PlannedQuery:
-        ts = self._get_tuple_sets(kws)
+        # plan against the tuple sets' OWN schema snapshot, not self.schema:
+        # an append landing mid-plan must not mix pre-append tuple sets with
+        # post-append row arrays (torn read) — the snapshot pins one epoch
+        ts, schema, epoch = self._get_tuple_sets(kws)
         cns = prune_empty_cns(self._get_cns(len(kws), req.r_max), ts)
-        host_freq = np.zeros((self.schema.vocab_size,), np.int64)
+        host_freq = np.zeros((schema.vocab_size,), np.int64)
         plans: List[CNPlan] = []
         shuffle_rows = shuffle_bytes = 0
         imbalance, row_imb, dominant_cost = 1.0, 1.0, -1.0
@@ -345,20 +398,20 @@ class FCTSession:
         if mode == "uniform" and self.config.adaptive_rho:
             mode = "adaptive"
         for cn in cns:
-            plan = build_cn_plan(self.schema, ts, cn, self._n_dev,
+            plan = build_cn_plan(schema, ts, cn, self._n_dev,
                                  mode=mode, rho=req.rho,
                                  sample_frac=req.sample_frac, salt=req.salt)
             if plan is None:
                 # single-relation CN: a map-only word-count (no shuffle)
                 fact_idx, dim_idx = ts.cn_rows(cn)
                 if fact_idx is not None:
-                    text = self.schema.fact.text[fact_idx]
+                    text = schema.fact.text[fact_idx]
                 else:
                     (i, rows), = dim_idx.items()
-                    text = self.schema.dims[i].text[rows]
+                    text = schema.dims[i].text[rows]
                 host_freq += tokens_histogram(
                     text, np.ones(text.shape[0], np.int64),
-                    self.schema.vocab_size)
+                    schema.vocab_size)
                 continue
             plans.append(plan)
             shuffle_rows += plan.shuffle_rows
@@ -374,7 +427,7 @@ class FCTSession:
                              shuffle_rows=shuffle_rows,
                              shuffle_bytes=shuffle_bytes,
                              imbalance=imbalance, row_imbalance=row_imb,
-                             plan_ms=plan_ms)
+                             plan_ms=plan_ms, data_epoch=epoch)
 
     def _host_freq_device(self, planned: _PlannedQuery):
         """Device-resident copy of a planned query's map-only histogram, or
@@ -449,7 +502,7 @@ class FCTSession:
             engine_stats=engine_stats,
             cold=engine_stats.get("traces", 0) > 0,
             accum_policy=self.accum_policy.name,
-            finalize=finalize,
+            finalize=finalize, data_epoch=planned.data_epoch,
             request=req, trace=planned.trace)
 
     def _finish(self, planned: _PlannedQuery, freq: np.ndarray,
@@ -660,6 +713,180 @@ class FCTSession:
                     if self._pipeline is pipeline:
                         self._pipeline = None
 
+    # -- incremental ingest --------------------------------------------------
+
+    def _encode_rows(self, relation: str, rows: Sequence[Mapping]
+                     ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """Validate + tokenize append rows into key columns and a text
+        matrix.  Each row mapping needs every key column of the relation
+        plus ``"text"`` (a string through the session tokenizer, or a
+        pre-tokenized id sequence padded/truncated to the relation's
+        ``text_len``).  Pure host work — runs outside every session lock."""
+        role, i = self.schema.relation_role(relation)
+        rel = self.schema.fact if role == "fact" else self.schema.dims[i]
+        text_len, vocab = rel.text_len, self.schema.vocab_size
+        keys: Dict[str, list] = {c: [] for c in rel.keys}
+        texts: List[np.ndarray] = []
+        for r, row in enumerate(rows):
+            row = dict(row)
+            text = row.pop("text", None)
+            if text is None:
+                raise ValueError(f"append row {r} has no 'text' field")
+            if isinstance(text, str):
+                if self.tokenizer is None:
+                    raise ValueError(
+                        f"append row {r}: string text needs a session "
+                        "tokenizer")
+                ids = np.asarray(self.tokenizer.encode(text, text_len),
+                                 np.int32)
+            else:
+                ids = np.asarray(text, np.int64).reshape(-1)[:text_len]
+                if ids.size and ((ids < 0).any() or (ids >= vocab).any()):
+                    raise ValueError(
+                        f"append row {r}: token ids outside [0, {vocab})")
+                ids = np.pad(ids, (0, text_len - ids.size),
+                             constant_values=PAD_ID).astype(np.int32)
+            texts.append(ids)
+            for c in keys:
+                if c not in row:
+                    raise ValueError(
+                        f"append row {r} missing key column {c!r} of "
+                        f"relation {relation!r}")
+                keys[c].append(int(row[c]))
+        if not texts:
+            return ({c: np.zeros((0,), np.int32) for c in keys},
+                    np.zeros((0, text_len), np.int32))
+        return ({c: np.asarray(v, np.int32) for c, v in keys.items()},
+                np.stack(texts))
+
+    def append(self, relation: str,
+               rows: Sequence[Mapping]) -> AppendResult:
+        """Append rows to one relation — the DATA-ONLY mutation path.
+
+        Unlike ``invalidate()`` (the arbitrary-mutation hook, which drops
+        everything data-derived), an append is pure growth, and almost all
+        session state survives it:
+
+          * the schema is REPLACED by one whose mutated relation carries an
+            extra chunk (old column arrays are shared, never resized, so
+            snapshots held by in-flight queries stay valid),
+          * cached tuple sets are patched in place — one ``keyword_mask``
+            pass over just the new rows each,
+          * the device-resident store keeps every pre-append column upload:
+            the chunked ``RelationRef`` layer re-aggregates them per chunk,
+          * CN enumerations and compiled executables are untouched,
+          * only routing plans (+ their device map-only histograms) drop —
+            row routing genuinely changes.
+
+        Everything mutates under ``_plan_lock``, the same critical section
+        queries snapshot under, and ``_data_epoch`` is bumped so in-flight
+        builds against the old data cannot re-enter the caches: a query
+        racing this append sees the pre- or post-append snapshot bit-
+        exactly, never a mix.  Concurrent ``append`` calls must be
+        serialized by the caller when cached results are patched from the
+        returned delta (the gateway's per-lane append lock does).
+        """
+        keys, text = self._encode_rows(relation, rows)
+        role, dim_index = self.schema.relation_role(relation)
+        with self._plan_lock:
+            old = (self.schema.fact if role == "fact"
+                   else self.schema.dims[dim_index])
+            base_rows = old.rows
+            if text.shape[0] == 0:  # no-op: nothing to fence
+                return AppendResult(relation=relation, role=role,
+                                    dim_index=dim_index, base_rows=base_rows,
+                                    rows_appended=0,
+                                    data_epoch=self._data_epoch)
+            self.schema = self.schema.with_appended(relation, keys, text)
+            self._data_epoch += 1
+            epoch = self._data_epoch
+            patched = 0
+            for kws in list(self._tuple_sets.keys()):
+                ts = self._tuple_sets.hit(kws)
+                mask = keyword_mask(text, kws)
+                if role == "fact":
+                    new_ts = TupleSets(
+                        fact_kw=np.concatenate([ts.fact_kw, mask]),
+                        dim_kw=ts.dim_kw, full=ts.full)
+                else:
+                    dk = list(ts.dim_kw)
+                    dk[dim_index] = np.concatenate([dk[dim_index], mask])
+                    new_ts = TupleSets(fact_kw=ts.fact_kw, dim_kw=dk,
+                                       full=ts.full)
+                assert self._data_epoch == epoch  # patched sets belong to
+                #                                   exactly this epoch
+                self._tuple_sets[kws] = new_ts
+                patched += 1
+            plans_dropped = len(self._plan_cache)
+            self._plan_cache.clear()
+            self._hf_dev.clear()  # map-only histograms are per-plan data
+        self._c_appends.inc()
+        self._c_delta_rows.inc(int(text.shape[0]))
+        return AppendResult(relation=relation, role=role,
+                            dim_index=dim_index, base_rows=base_rows,
+                            rows_appended=int(text.shape[0]),
+                            data_epoch=epoch, tuple_sets_patched=patched,
+                            plans_dropped=plans_dropped)
+
+    def delta_freq(self, result: AppendResult, keywords: Sequence,
+                   r_max: int) -> np.ndarray:
+        """Exact histogram contribution of ``result``'s appended chunk.
+
+        ``freq(base + chunk) == freq(base) + delta`` in exact integer
+        arithmetic, so a cached full histogram for (keywords, r_max) is
+        patched by plain addition — the gateway's append hook does exactly
+        that.  The delta dispatch runs only CNs whose join tree contains
+        the mutated relation, against tuple sets restricted to the new
+        chunk (the other relations keep their full sets); it reuses the
+        session's engine, store and compiled program families.  The delta
+        is independent of mode/rho/sample_frac/salt — those are routing
+        knobs, totals are invariant — so one delta serves every cached
+        entry sharing (keywords, r_max).
+
+        Must run against the epoch ``result`` produced (raises
+        ``RuntimeError`` if another mutation overtook it): callers patching
+        caches serialize append → delta → patch, as the gateway does.
+        """
+        if result.rows_appended == 0:
+            return np.zeros((self.schema.vocab_size,), np.int64)
+        kws = self.resolve_keywords(keywords)
+        ts, schema, epoch = self._get_tuple_sets(kws)
+        if epoch != result.data_epoch:
+            raise RuntimeError(
+                f"delta_freq for data epoch {result.data_epoch} but the "
+                f"session is at {epoch}: serialize appends with their "
+                "patch-up")
+        dts = _delta_tuple_sets(ts, result.role, result.dim_index,
+                                result.base_rows)
+        cns = [cn for cn in self._get_cns(len(kws), r_max)
+               if _cn_includes(cn, result.role, result.dim_index)]
+        cns = prune_empty_cns(cns, dts)
+        delta = np.zeros((schema.vocab_size,), np.int64)
+        plans: List[CNPlan] = []
+        for cn in cns:
+            # totals are mode-invariant: plan the delta uniformly
+            plan = build_cn_plan(schema, dts, cn, self._n_dev,
+                                 mode="uniform")
+            if plan is None:  # single-relation CN: map-only over new rows
+                fact_idx, dim_idx = dts.cn_rows(cn)
+                if fact_idx is not None:
+                    text = schema.fact.text[fact_idx]
+                else:
+                    (i, rows_i), = dim_idx.items()
+                    text = schema.dims[i].text[rows_i]
+                delta += tokens_histogram(
+                    text, np.ones(text.shape[0], np.int64),
+                    schema.vocab_size)
+                continue
+            plans.append(plan)
+        if plans:
+            with self._engine_lock:
+                delta += self.engine.run_plans(
+                    plans, self.mesh, self.config.histogram_backend,
+                    store=self.store, accum=self.accum_policy)
+        delta[PAD_ID] = 0  # parity with _finish: PAD never counts
+        return delta
+
     # -- lifecycle / introspection ------------------------------------------
 
     def invalidate(self) -> Dict[str, int]:
@@ -704,11 +931,14 @@ class FCTSession:
         counters."""
         out = dict(self.engine.stats())
         out.update(self.store.stats())
-        served, ts_hits, ts_misses, plan_hits, plan_misses = \
-            self.metrics.values(self._c_queries, self._c_ts_hits,
-                                self._c_ts_misses, self._c_plan_hits,
-                                self._c_plan_misses)
+        served, ts_hits, ts_misses, plan_hits, plan_misses, appends, \
+            delta_rows = self.metrics.values(
+                self._c_queries, self._c_ts_hits, self._c_ts_misses,
+                self._c_plan_hits, self._c_plan_misses, self._c_appends,
+                self._c_delta_rows)
         out.update(queries_served=served,
+                   appends=appends,
+                   delta_rows=delta_rows,
                    tuple_set_entries=len(self._tuple_sets),
                    tuple_set_hits=ts_hits,
                    tuple_set_misses=ts_misses,

@@ -26,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import math
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -69,6 +69,13 @@ class RelationRef:
     base_keys: Tuple[np.ndarray, ...]    # key columns, shared references
     n_devices: int
     uid: Tuple = None
+    #: the base relation's append-chunk row counts (``Relation.chunks``),
+    #: None for single-chunk relations.  Layout-neutral metadata: the device
+    #: layout (and hence ``uid``) is the same contiguous row sharding either
+    #: way — chunking only lets the RelationStore split an upload into
+    #: per-chunk content-addressed pieces (:meth:`chunk_parts`), so an
+    #: append re-ships the new chunk, not the whole column set.
+    base_chunks: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self) -> None:
         if self.uid is None:
@@ -95,6 +102,32 @@ class RelationRef:
     @property
     def key_width(self) -> int:
         return len(self.base_keys)
+
+    def chunk_parts(self) -> Optional[List["RelationRef"]]:
+        """Per-base-chunk sub-refs when ``rows`` spans more than one chunk.
+
+        Returns None when the relation has a single chunk or every row falls
+        in one chunk (the legacy single-upload path covers those exactly —
+        including delta refs over a freshly appended chunk).  Each sub-ref
+        carries the rows of one populated chunk, so its ``uid`` equals the
+        uid a pre-append (or delta-dispatch) ref over those same rows
+        computed — that aliasing is what lets the store reuse the old
+        chunks' device columns after an append.  Requires ``rows`` sorted
+        ascending (tuple-set rows come from ``np.nonzero`` and are).
+        """
+        if self.base_chunks is None or len(self.base_chunks) < 2:
+            return None
+        bounds = np.cumsum(np.asarray(self.base_chunks, np.int64))[:-1]
+        cuts = [0, *np.searchsorted(self.rows, bounds).tolist(),
+                len(self.rows)]
+        spans = [(a, b) for a, b in zip(cuts, cuts[1:]) if b > a]
+        if len(spans) < 2:
+            return None
+        return [RelationRef(role=self.role, name=self.name,
+                            rows=self.rows[a:b], base_text=self.base_text,
+                            base_keys=self.base_keys,
+                            n_devices=self.n_devices)
+                for a, b in spans]
 
     # -- on-demand host materialization -------------------------------------
 
@@ -306,7 +339,7 @@ def build_cn_plan(schema: StarSchema, ts: TupleSets, cn: StarCN,
                            base_text=schema.fact.text,
                            base_keys=tuple(schema.fact_keys(i)
                                            for i in range(schema.m)),
-                           n_devices=P)
+                           n_devices=P, base_chunks=schema.fact.chunks)
     S_f = fact_ref.shard_rows
     rows = np.arange(len(fact_idx))
     src = (rows // S_f).astype(np.int32)
@@ -324,7 +357,8 @@ def build_cn_plan(schema: StarSchema, ts: TupleSets, cn: StarCN,
         rows_i = dim_idx[i]
         dim_ref = RelationRef(role="dim", name=schema.dims[i].name,
                               rows=rows_i, base_text=schema.dims[i].text,
-                              base_keys=(schema.dim_keys(i),), n_devices=P)
+                              base_keys=(schema.dim_keys(i),), n_devices=P,
+                              base_chunks=schema.dims[i].chunks)
         S_d = dim_ref.shard_rows
         r = np.arange(len(rows_i))
         src_d = (r // S_d).astype(np.int32)

@@ -33,13 +33,16 @@ import threading
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.plan import CNPlan, RelationRef
+from repro.data.schema import PAD_ID
 from repro.obs import default_registry
 from repro.obs import span as obs_span
-from repro.runtime.batch import PlanSignature, RelationSig, x64_flag
+from repro.runtime.batch import (PlanSignature, RelationSig, bucket_pow2,
+                                 x64_flag)
 from repro.runtime.cache import LruDict
 
 
@@ -74,6 +77,10 @@ class RelationStore:
         self._c_hits = self.metrics.counter("store.hits")
         self._c_evictions = self.metrics.counter("store.evictions")
         self._c_upload_bytes = self.metrics.counter("store.upload_bytes")
+        # chunked (append-path) entries assembled on DEVICE from resident
+        # per-chunk columns: no host->device column traffic, so they count
+        # here instead of store.uploads/upload_bytes
+        self._c_assembles = self.metrics.counter("store.chunk_assembles")
         self._g_resident = self.metrics.gauge("store.resident_bytes")
         # bumped by clear(): an upload that started before an invalidation
         # must not re-insert pre-invalidation columns after it
@@ -97,6 +104,10 @@ class RelationStore:
         return self._c_upload_bytes.value
 
     @property
+    def chunk_assembles(self) -> int:
+        return self._c_assembles.value
+
+    @property
     def resident_bytes(self) -> int:
         return self._g_resident.value
 
@@ -105,7 +116,18 @@ class RelationStore:
     def columns(self, ref: RelationRef, rows_pad: int,
                 text_pad: int) -> StoredColumns:
         """The ref's device columns padded to (rows_pad, text_pad),
-        uploading them on first use (or after eviction)."""
+        uploading them on first use (or after eviction).
+
+        Refs spanning several append chunks (``ref.chunk_parts()``) are
+        assembled on DEVICE from per-chunk entries instead of re-uploading
+        the whole column set: each part goes through this same method (a
+        part's uid equals the uid of a plain ref over the same rows, so
+        pre-append and delta-dispatch uploads alias), then the combined
+        entry concatenates the parts' rows and re-pads — bit-identical to
+        what a direct upload of the full ref would have produced.  Only the
+        parts missing from the store cost host->device traffic, which is
+        how an append re-ships one chunk, not the relation.
+        """
         key = (ref.uid, rows_pad, text_pad, x64_flag())
         with self._lock:
             cached = self._entries.hit(key)
@@ -113,28 +135,39 @@ class RelationStore:
                 self._c_hits.inc()
                 return cached
             epoch = self.epoch
-        with obs_span("store.upload", rows_pad=rows_pad,
-                      text_pad=text_pad) as sp:     # outside the lock
-            text, keys = ref.store_columns(rows_pad, text_pad)
-            nbytes = text.nbytes + keys.nbytes
-            sp.args["bytes"] = nbytes
-            stored = StoredColumns(
-                text=jax.device_put(text, self._sharding),
-                keys=jax.device_put(keys, self._sharding), nbytes=nbytes)
+        parts = ref.chunk_parts()
+        if parts is not None:
+            with obs_span("store.chunk_assemble", parts=len(parts),
+                          rows_pad=rows_pad, text_pad=text_pad):
+                part_cols = [self.columns(p, bucket_pow2(p.shard_rows),
+                                          text_pad) for p in parts]
+                stored = self._assemble(parts, part_cols, rows_pad, text_pad)
+        else:
+            with obs_span("store.upload", rows_pad=rows_pad,
+                          text_pad=text_pad) as sp:     # outside the lock
+                text, keys = ref.store_columns(rows_pad, text_pad)
+                nbytes = text.nbytes + keys.nbytes
+                sp.args["bytes"] = nbytes
+                stored = StoredColumns(
+                    text=jax.device_put(text, self._sharding),
+                    keys=jax.device_put(keys, self._sharding), nbytes=nbytes)
         with self._lock:
             raced = self._entries.hit(key)
             if raced is not None:      # concurrent uploader won
                 self._c_hits.inc()
                 return raced
-            self._c_uploads.inc()
-            self._c_upload_bytes.inc(nbytes)
+            if parts is not None:
+                self._c_assembles.inc()
+            else:
+                self._c_uploads.inc()
+                self._c_upload_bytes.inc(stored.nbytes)
             if self.epoch != epoch:
                 # a clear() (data invalidation) overtook this upload: the
                 # columns may predate the mutation, and the row-index
                 # fingerprint cannot tell — serve this dispatch, cache
                 # nothing (the next reference re-reads the base arrays)
                 return stored
-            resident = self._g_resident.add(nbytes)
+            resident = self._g_resident.add(stored.nbytes)
             self._entries.put(key, stored)
             if self.max_bytes is not None:
                 while resident > self.max_bytes and len(self._entries) > 1:
@@ -142,6 +175,45 @@ class RelationStore:
                     resident = self._g_resident.add(-dropped.nbytes)
                     self._c_evictions.inc()
             return stored
+
+    def _assemble(self, parts: List[RelationRef],
+                  cols: List[StoredColumns], rows_pad: int,
+                  text_pad: int) -> StoredColumns:
+        """Combine per-chunk device columns into one padded entry.
+
+        Each part entry holds its rows contiguously sharded: device d's
+        first ``ceil(n_part / P)`` slots are rows ``d*S .. (d+1)*S`` (flat
+        row order preserved, pad at the flat tail), so slicing off the pad,
+        flattening and concatenating the chunks recovers the combined row
+        order; re-sharding at the COMBINED shard size ``ceil(n_total / P)``
+        and re-padding each device to ``rows_pad`` then reproduces EXACTLY
+        the array a direct ``ref.store_columns`` upload builds — all on
+        device (eager jnp ops + a resharding device_put), no host columns.
+        """
+        P_dev = parts[0].n_devices
+        texts, keys = [], []
+        for p, c in zip(parts, cols):
+            S, n = p.shard_rows, p.n_rows
+            texts.append(c.text[:, :S, :].reshape(P_dev * S, text_pad)[:n])
+            k = c.keys[:, :S]
+            keys.append(k.reshape((P_dev * S,) + k.shape[2:])[:n])
+        text = jnp.concatenate(texts, axis=0)
+        keyc = jnp.concatenate(keys, axis=0)
+        n_total = int(text.shape[0])
+        S_ref = -(-n_total // P_dev)          # == the combined ref's
+        #                                       shard_rows (<= rows_pad)
+        tail = P_dev * S_ref - n_total
+        text = jnp.pad(text, ((0, tail), (0, 0)), constant_values=PAD_ID)
+        keyc = jnp.pad(keyc, ((0, tail),) + ((0, 0),) * (keyc.ndim - 1))
+        text = text.reshape(P_dev, S_ref, text_pad)
+        keyc = keyc.reshape((P_dev, S_ref) + keyc.shape[1:])
+        row_pad = ((0, 0), (0, rows_pad - S_ref))
+        text = jnp.pad(text, row_pad + ((0, 0),), constant_values=PAD_ID)
+        keyc = jnp.pad(keyc, row_pad + ((0, 0),) * (keyc.ndim - 2))
+        return StoredColumns(
+            text=jax.device_put(text, self._sharding),
+            keys=jax.device_put(keyc, self._sharding),
+            nbytes=int(text.nbytes + keyc.nbytes))
 
     # -- lifecycle / introspection ------------------------------------------
 
@@ -159,15 +231,17 @@ class RelationStore:
         return len(self._entries)
 
     def stats(self) -> Dict[str, int]:
-        uploads, hits, evictions, up_bytes, resident = self.metrics.values(
+        (uploads, hits, evictions, up_bytes, assembles,
+         resident) = self.metrics.values(
             self._c_uploads, self._c_hits, self._c_evictions,
-            self._c_upload_bytes, self._g_resident)
+            self._c_upload_bytes, self._c_assembles, self._g_resident)
         with self._lock:
             return {"store_entries": len(self._entries),
                     "store_uploads": uploads,
                     "store_hits": hits,
                     "store_evictions": evictions,
                     "store_upload_bytes": up_bytes,
+                    "store_chunk_assembles": assembles,
                     "store_bytes": resident}
 
 

@@ -45,7 +45,7 @@ import time
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Tuple
 
-from repro.api.request import FCTRequest, FCTResponse
+from repro.api.request import AppendResult, FCTRequest, FCTResponse
 from repro.api.session import FCTSession
 from repro.core.star import topk_terms
 from repro.obs import LATENCY_BUCKETS_MS, Trace, default_registry
@@ -70,6 +70,13 @@ class GatewayConfig:
                                         # different tenants flush in parallel
                                         # on these threads (0 = legacy inline
                                         # flushing on each tenant's collector)
+    append_policy: str = "patch"        # what append() does to the tenant's
+                                        # memoized results: "patch" adds the
+                                        # exact delta histogram to every
+                                        # cached entry (post-append hits stay
+                                        # warm), "drop" invalidates them
+                                        # (cheapest when the cache rarely
+                                        # outlives an append)
 
     def __post_init__(self) -> None:
         # fail at construction, not inside the first submit()'s lazy lane
@@ -96,6 +103,10 @@ class GatewayConfig:
         if self.flush_workers < 0:
             raise ValueError(
                 f"flush_workers must be >= 0, got {self.flush_workers}")
+        if self.append_policy not in ("patch", "drop"):
+            raise ValueError(
+                f"append_policy must be 'patch' or 'drop', got "
+                f"{self.append_policy!r}")
 
 
 @dataclasses.dataclass
@@ -138,6 +149,11 @@ class _Lane:
     shuffle: object = None               # obs.Counter, gateway.shuffle_bytes
     c_coalesced: object = None           # obs.Counter, gateway.coalesced
     d2h: object = None                   # obs.Counter, gateway.device_to_host_bytes
+    c_patched: object = None             # obs.Counter, gateway.histograms_patched
+    # serializes append -> delta -> patch per tenant: delta_freq must run
+    # against exactly the epoch its append produced
+    append_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock)
 
 
 class Gateway:
@@ -202,7 +218,8 @@ class Gateway:
                                          buckets=LATENCY_BUCKETS_MS),
                     shuffle=lm.counter("gateway.shuffle_bytes"),
                     c_coalesced=lm.counter("gateway.coalesced"),
-                    d2h=lm.counter("gateway.device_to_host_bytes"))
+                    d2h=lm.counter("gateway.device_to_host_bytes"),
+                    c_patched=lm.counter("gateway.histograms_patched"))
             return lane
 
     @staticmethod
@@ -422,6 +439,83 @@ class Gateway:
         """Synchronous convenience wrapper over ``submit``."""
         return self.submit(schema, request).result(timeout=timeout)
 
+    # -- incremental ingest --------------------------------------------------
+
+    def append(self, schema: str, relation: str, rows) -> AppendResult:
+        """Append rows to one tenant relation and keep its caches WARM.
+
+        Routes to the tenant session's :meth:`repro.api.FCTSession.append`
+        (chunked store growth, in-place tuple-set patching, epoch bump),
+        then reconciles the tenant's memoized results per
+        ``config.append_policy``:
+
+        ``"patch"`` (default) — drain the result cache and add each entry's
+        exact delta histogram (``session.delta_freq``; deduped by
+        (keywords, r_max): the delta is invariant to mode/rho/sample_frac/
+        salt), re-finalizing the top-k from the patched histogram.  This
+        covers device-topk tenants too: their cached masters always carry
+        the full histogram (``submit`` forces ``need_histogram`` on cache
+        fills).  Patching is bit-identical to a cold re-query: integer
+        histograms are additive, and under an int32 tenant the int32 wrap
+        a cold accumulation would hit is emulated on the patched totals —
+        a patch that *would* overflow raises the cold path's
+        ``OverflowError`` (the affected entries are dropped, not served).
+
+        ``"drop"`` — just invalidate the memoized results.
+
+        The drain doubles as a generation fence: queries dispatched before
+        the append insert under the old generation and are discarded, while
+        entries that raced in *after* the session append (their
+        ``data_epoch`` already covers the new rows) are re-inserted
+        unpatched — never double-counted.  Appends to one tenant are
+        serialized on a per-lane lock; queries keep flowing concurrently.
+        """
+        if self._closed:
+            raise RuntimeError("gateway is closed")
+        lane = self._lane(schema)             # KeyError on unknown name
+        with lane.append_lock:
+            result = lane.session.append(relation, rows)
+            if result.rows_appended == 0:
+                return result
+            if self.config.append_policy == "drop":
+                lane.results.invalidate()
+                return result
+            gen, entries = lane.results.drain()
+            deltas: Dict[tuple, object] = {}
+            policy = lane.session.accum_policy
+            for key, master in entries:
+                if master.data_epoch >= result.data_epoch:
+                    # already computed over the appended data (the query
+                    # raced in between session append and drain): patching
+                    # would double-count the new rows
+                    lane.results.put(key, master, generation=gen)
+                    continue
+                dkey = (key[0], key[1])       # (sorted keywords, r_max)
+                delta = deltas.get(dkey)
+                if delta is None:
+                    delta = deltas[dkey] = lane.session.delta_freq(
+                        result, key[0], key[1])
+                patched = master.all_freqs + delta   # int64: exact
+                if policy.check_wrap:
+                    # emulate the tenant's int32 device accumulation on the
+                    # patched totals (symmetric wrap into int32 range) so a
+                    # patch past 2^31 raises exactly what a cold re-query
+                    # would; below the limit the wrap is the identity
+                    patched = ((patched + (1 << 31)) % (1 << 32)) - (1 << 31)
+                policy.check_totals(patched)  # raises OverflowError on wrap
+                ids, f = topk_terms(patched, key[0], master.request.top_k,
+                                    lane.session.stop_mask)
+                if lane.session.tokenizer is not None:
+                    terms = [lane.session.tokenizer.decode(t) for t in ids]
+                else:
+                    terms = [f"<{int(t)}>" for t in ids]
+                lane.results.put(key, dataclasses.replace(
+                    master, terms=terms, term_ids=ids, freqs=f,
+                    all_freqs=patched, data_epoch=result.data_epoch),
+                    generation=gen)
+                lane.c_patched.inc()
+        return result
+
     # -- cache control -------------------------------------------------------
 
     def invalidate(self, schema: str) -> int:
@@ -468,6 +562,7 @@ class Gateway:
             stats.update(lane.batcher.stats())
             stats.update(lane.session.stats())   # carries accum_policy
             stats["coalesced"] = lane.c_coalesced.value
+            stats["histograms_patched"] = lane.c_patched.value
             out[name] = stats
         return out
 

@@ -118,6 +118,32 @@ class ResultCache:
             self._entries.pop(key, None)
             self._entries.put(key, (expires_at, value))
 
+    def drain(self):
+        """Atomically take every live entry out for patch-up, bumping the
+        generation: ``(new_generation, [(key, value), ...])``.
+
+        The append path drains, patches each histogram by the append delta,
+        and re-inserts with ``generation=new_generation`` — puts from queries
+        dispatched BEFORE the drain carry the old generation and are
+        dropped, exactly like :meth:`invalidate` (drain IS an invalidation
+        whose data survives in patched form).  Expired entries are skipped
+        and counted; re-inserted entries get a fresh TTL through the normal
+        :meth:`put`.
+        """
+        with self._lock:
+            self.generation += 1
+            out = []
+            if not self.enabled:
+                return self.generation, out
+            now = self._clock()
+            for key, (expires_at, value) in self._entries.items():
+                if expires_at is not None and now >= expires_at:
+                    self._c_expirations.inc()
+                    continue
+                out.append((key, value))
+            self._entries.clear()
+            return self.generation, out
+
     def invalidate(self, key: Hashable = None) -> int:
         """Drop one entry (``key``) or every entry (``key=None``); returns
         the number dropped.  Call on any mutation of the underlying data.

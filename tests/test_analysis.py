@@ -242,6 +242,34 @@ def test_r5_passes_fenced_puts(tmp_path):
     assert violations == []
 
 
+def test_r5_flags_unfenced_subscript_assign(tmp_path):
+    # the incremental-ingest append path patches cached tuple sets in place
+    # via subscript assignment — same insert, different spelling, same rule
+    violations, _ = run_rules(tmp_path, "api/session.py", """\
+        class FCTSession:
+            def patch(self, kws, ts):
+                with self._plan_lock:
+                    self._tuple_sets[kws] = ts
+        """)
+    assert rule_ids(violations) == ["R5"]
+    assert "_tuple_sets" in violations[0].message
+
+
+def test_r5_passes_fenced_subscript_assign(tmp_path):
+    violations, _ = run_rules(tmp_path, "api/session.py", """\
+        class FCTSession:
+            def patch(self, kws, ts, epoch):
+                with self._plan_lock:
+                    assert self._data_epoch == epoch
+                    self._tuple_sets[kws] = ts
+
+            def untracked(self, kws):
+                with self._plan_lock:
+                    self._scratch[kws] = 1   # not a configured cache
+        """)
+    assert violations == []
+
+
 # -- waivers ------------------------------------------------------------------
 
 def test_waiver_on_line_or_line_above(tmp_path):

@@ -1,0 +1,509 @@
+"""Incremental ingest: the append path is proven equivalent to cold rebuilds.
+
+The contract under test (ROADMAP "Incremental ingest & delta-maintained
+results"): ``FCTSession.append`` + delta dispatch + histogram patch-up is
+BIT-IDENTICAL to tearing the session down and recomputing over the
+concatenated data — across fact and dimension appends, empty batches,
+brand-new vocabulary, top-k-flipping deltas, both accumulation policies,
+1 and 8 devices (subprocess: XLA_FLAGS precedes jax import) and both
+finalize paths (host histogram and device_topk).  Epoch fencing: a query
+racing an append reports a ``data_epoch`` whose histogram matches that
+epoch's snapshot exactly — never a torn mix — and an int32 patch that
+would wrap raises the same OverflowError the cold path raises.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import AppendResult, FCTRequest, FCTSession, SessionConfig
+from repro.core.accum import INT32_CHECKED
+from repro.data.schema import JoinEdge, Relation, StarSchema
+from repro.serve.gateway import Gateway, GatewayConfig
+from repro.serve.registry import SchemaRegistry
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                                      reason="hypothesis not installed")
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+VOCAB = 48
+TEXT_LEN = 4
+KWS = (40, 41)
+# base text draws from [1, 40): ids >= 40 appear only where tests plant
+# them, so 44 is a brand-new vocabulary term no base row ever contains
+NEW_TERM = 44
+
+
+def make_schema(seed: int, m: int = 2, fact_rows: int = 20,
+                dim_rows=(6, 5, 4)):
+    rng = np.random.default_rng(seed)
+    dim_rows = list(dim_rows[:m])
+    dim_texts = [rng.integers(1, 40, (r, TEXT_LEN)).astype(np.int32)
+                 for r in dim_rows]
+    fact_text = rng.integers(1, 40, (fact_rows, TEXT_LEN)).astype(np.int32)
+    for t in [fact_text, *dim_texts]:     # plant the query keywords
+        for kw, frac in zip(KWS, (0.5, 0.3)):
+            idx = np.nonzero(rng.random(t.shape[0]) < frac)[0]
+            t[idx, rng.integers(0, TEXT_LEN, idx.size)] = kw
+    dims = [Relation(f"D{i}",
+                     keys={f"k{i}": np.arange(dim_rows[i], dtype=np.int32)},
+                     key_domains={f"k{i}": dim_rows[i]}, text=dim_texts[i])
+            for i in range(m)]
+    edges = [JoinEdge(f"D{i}", f"k{i}", f"k{i}") for i in range(m)]
+    fact = Relation(
+        "F",
+        keys={f"k{i}": rng.integers(0, dim_rows[i], fact_rows)
+              .astype(np.int32) for i in range(m)},
+        key_domains={f"k{i}": dim_rows[i] for i in range(m)},
+        text=fact_text)
+    return StarSchema(fact=fact, dims=dims, edges=edges, vocab_size=VOCAB)
+
+
+def make_batch(rng, schema, relation: str, n_rows: int, plant=KWS,
+               new_term: bool = False, copy_text: bool = False):
+    """Row mappings for one append batch against the CURRENT schema state."""
+    role, i = schema.relation_role(relation)
+    rel = schema.fact if role == "fact" else schema.dims[i]
+    rows = []
+    for j in range(n_rows):
+        if copy_text:                     # reuse an existing row's text:
+            src = int(rng.integers(0, rel.rows))   # no new tuple-set masks
+            text = rel.text[src].tolist()
+        else:
+            text = rng.integers(1, 40, TEXT_LEN).astype(int).tolist()
+            for kw in plant:
+                if rng.random() < 0.5:
+                    text[int(rng.integers(0, TEXT_LEN))] = kw
+            if new_term and rng.random() < 0.5:
+                text[int(rng.integers(0, TEXT_LEN))] = NEW_TERM
+        if role == "fact":                # FK into each dim's current rows
+            row = {f"k{k}": int(rng.integers(0, schema.dims[k].rows))
+                   for k in range(schema.m)}
+        else:                             # new dim rows ARE new PK values
+            row = {f"k{i}": rel.rows + j}
+        row["text"] = text
+        rows.append(row)
+    return rows
+
+
+def cold_freqs(schema, req: FCTRequest) -> np.ndarray:
+    with FCTSession(schema) as s:
+        return s.query(req).all_freqs
+
+
+# -- the tentpole property: append == cold rebuild, bit for bit --------------
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = dict(max_examples=10, deadline=None)
+
+    def _random_run(data, device_topk: bool):
+        """base + 1..4 append batches; checks bit-identity after EVERY
+        batch, plus delta-patch additivity on the host-histogram path."""
+        seed = data.draw(st.integers(0, 10_000))
+        rng = np.random.default_rng(seed)
+        m = data.draw(st.integers(1, 3))
+        schema = make_schema(seed, m=m,
+                             fact_rows=data.draw(st.integers(4, 24)))
+        req = FCTRequest(keywords=KWS, r_max=m + 1, top_k=5,
+                         mode=data.draw(st.sampled_from(
+                             ["uniform", "skew", "round_robin"])))
+        sess = FCTSession(schema, config=SessionConfig(
+            device_topk=device_topk))
+        resp = sess.query(req)
+        freq = resp.all_freqs
+        n_batches = data.draw(st.integers(1, 4))
+        epoch = 0
+        for _ in range(n_batches):
+            relation = data.draw(st.sampled_from(
+                ["F"] + [f"D{i}" for i in range(m)]))
+            n_rows = data.draw(st.integers(0, 5))   # 0 = empty append
+            batch = make_batch(rng, sess.schema, relation, n_rows,
+                               new_term=True)
+            ar = sess.append(relation, batch)
+            assert ar.rows_appended == n_rows
+            epoch += 1 if n_rows else 0
+            assert ar.data_epoch == epoch           # empty append: no bump
+            if not device_topk and n_rows:
+                freq = freq + sess.delta_freq(ar, KWS, req.r_max)
+            resp = sess.query(req)
+            assert resp.data_epoch == epoch
+            cold = FCTSession(sess.schema,
+                              config=SessionConfig(device_topk=device_topk))
+            want = cold.query(req)
+            np.testing.assert_array_equal(resp.term_ids, want.term_ids)
+            np.testing.assert_array_equal(resp.freqs, want.freqs)
+            if not device_topk:
+                np.testing.assert_array_equal(resp.all_freqs,
+                                              want.all_freqs)
+                np.testing.assert_array_equal(freq, want.all_freqs)
+            cold.close()
+        sess.close()
+
+    @needs_hypothesis
+    @settings(**SETTINGS)
+    @given(st.data())
+    def test_append_equals_cold_rebuild_host_path(data):
+        _random_run(data, device_topk=False)
+
+    @needs_hypothesis
+    @settings(**SETTINGS)
+    @given(st.data())
+    def test_append_equals_cold_rebuild_device_topk(data):
+        _random_run(data, device_topk=True)
+
+
+# -- deterministic append-path behavior ---------------------------------------
+
+def test_empty_append_is_a_noop():
+    sess = FCTSession(make_schema(3))
+    r0 = sess.query(FCTRequest(keywords=KWS, r_max=3))
+    ar = sess.append("F", [])
+    assert isinstance(ar, AppendResult)
+    assert (ar.rows_appended, ar.data_epoch) == (0, 0)
+    assert sess.schema.fact.chunks is None          # no new chunk
+    delta = sess.delta_freq(ar, KWS, 3)
+    assert not delta.any()
+    r1 = sess.query(FCTRequest(keywords=KWS, r_max=3))
+    np.testing.assert_array_equal(r0.all_freqs, r1.all_freqs)
+    assert r1.data_epoch == 0
+
+
+def test_append_validation():
+    sess = FCTSession(make_schema(4))
+    with pytest.raises(KeyError, match="unknown relation"):
+        sess.append("NOPE", [{"text": [1, 2, 3, 4]}])
+    with pytest.raises(ValueError, match="no 'text'"):
+        sess.append("F", [{"k0": 0, "k1": 0}])
+    with pytest.raises(ValueError, match="missing key column"):
+        sess.append("F", [{"k0": 0, "text": [1, 2, 3, 4]}])
+    with pytest.raises(ValueError, match="outside"):
+        sess.append("F", [{"k0": 0, "k1": 99, "text": [1, 2, 3, 4]}])
+    with pytest.raises(ValueError, match="token ids outside"):
+        sess.append("F", [{"k0": 0, "k1": 0, "text": [1, VOCAB + 7]}])
+    with pytest.raises(ValueError, match="needs a session tokenizer"):
+        sess.append("F", [{"k0": 0, "k1": 0, "text": "hello"}])
+    # the failed appends left no trace: epoch unmoved, query unchanged
+    assert sess.query(FCTRequest(keywords=KWS, r_max=3)).data_epoch == 0
+
+
+def test_post_append_query_retraces_zero_executables():
+    """Satellite regression: schema-derived state (CN enumerations, compiled
+    executables, per-chunk device columns) survives a data-only append, so
+    the first post-append query re-plans but re-traces NOTHING — appended
+    rows reuse existing text (no new tuple-set masks) and fit the pow2 shard
+    bucket, so every plan signature is already compiled."""
+    rng = np.random.default_rng(11)
+    sess = FCTSession(make_schema(11, fact_rows=40))
+    req = FCTRequest(keywords=KWS, r_max=3)
+    sess.query(req)                       # cold: compiles
+    warm = sess.query(req)
+    assert warm.engine_stats["traces"] == 0
+    uploads_before = sess.stats()["store_uploads"]
+    ar = sess.append("F", make_batch(rng, sess.schema, "F", 6,
+                                     copy_text=True))
+    assert ar.plans_dropped > 0           # routing genuinely changed...
+    post = sess.query(req)
+    assert post.data_epoch == ar.data_epoch
+    assert post.engine_stats["traces"] == 0        # ...but nothing recompiled
+    assert not post.cold
+    st_after = sess.stats()
+    assert st_after["store_chunk_assembles"] > 0   # chunked store: device-
+    #                                                side re-aggregation
+    np.testing.assert_array_equal(post.all_freqs,
+                                  cold_freqs(sess.schema, req))
+    # CN enumerations survived the append (schema-derived, not data-derived)
+    assert len(sess._cn_lists) > 0
+    # the delta upload shipped only chunk-sized columns, not the relation
+    assert st_after["store_uploads"] >= uploads_before
+
+
+def test_append_keeps_old_schema_snapshot_intact():
+    sess = FCTSession(make_schema(5))
+    old_schema = sess.schema
+    old_fact_text = old_schema.fact.text
+    rng = np.random.default_rng(5)
+    sess.append("F", make_batch(rng, sess.schema, "F", 3))
+    assert sess.schema is not old_schema
+    assert old_schema.fact.rows == 20              # snapshot unmoved
+    np.testing.assert_array_equal(old_fact_text, sess.schema.fact.text[:20])
+    assert sess.schema.fact.chunks == (20, 3)
+
+
+# -- gateway: per-schema routing, patch vs drop -------------------------------
+
+def _gateway(policy: str, **cfg):
+    reg = SchemaRegistry()
+    reg.register("t", make_schema(21))
+    return Gateway(reg, GatewayConfig(batch_window_ms=0.0,
+                                      append_policy=policy, **cfg)), reg
+
+
+def test_gateway_patch_keeps_cache_warm_and_exact():
+    gw, reg = _gateway("patch")
+    rng = np.random.default_rng(21)
+    reqs = [FCTRequest(keywords=KWS, r_max=3, top_k=5),
+            FCTRequest(keywords=KWS, r_max=3, top_k=5, mode="skew", rho=2),
+            FCTRequest(keywords=KWS[:1], r_max=2, top_k=4)]
+    for r in reqs:
+        gw.query("t", r)
+    ar = gw.append("t", "F",
+                   make_batch(rng, reg.session("t").schema, "F", 4,
+                              new_term=True))
+    assert ar.rows_appended == 4
+    stats = gw.stats()["t"]
+    assert stats["histograms_patched"] == 3
+    assert stats["appends"] == 1 and stats["delta_rows"] == 4
+    for r in reqs:
+        resp = gw.query("t", r)
+        assert resp.cache_hit                      # patched, not dropped
+        assert resp.data_epoch == ar.data_epoch
+        want = cold_freqs(reg.session("t").schema, r)
+        np.testing.assert_array_equal(resp.all_freqs, want)
+    # the two (keywords, r_max)-equal requests shared one delta dispatch;
+    # a second append patches again without re-querying
+    ar2 = gw.append("t", "D0", [{"k0": reg.session("t").schema.dims[0].rows,
+                                 "text": [KWS[0], 1, 2, 3]}])
+    for r in reqs:
+        resp = gw.query("t", r)
+        assert resp.cache_hit and resp.data_epoch == ar2.data_epoch
+        np.testing.assert_array_equal(
+            resp.all_freqs, cold_freqs(reg.session("t").schema, r))
+    gw.close()
+
+
+def test_gateway_drop_policy_invalidates_results():
+    gw, reg = _gateway("drop")
+    req = FCTRequest(keywords=KWS, r_max=3)
+    gw.query("t", req)
+    assert gw.query("t", req).cache_hit
+    rng = np.random.default_rng(23)
+    ar = gw.append("t", "F", make_batch(rng, reg.session("t").schema, "F", 2))
+    resp = gw.query("t", req)
+    assert not resp.cache_hit and not resp.coalesced
+    assert resp.data_epoch == ar.data_epoch
+    np.testing.assert_array_equal(resp.all_freqs,
+                                  cold_freqs(reg.session("t").schema, req))
+    gw.close()
+
+
+def test_gateway_device_topk_masters_refinalize_from_patched_histogram():
+    """device-topk tenants memoize full-histogram masters (submit forces
+    need_histogram on fills), so the patch path re-finalizes their top-k
+    instead of dropping them."""
+    reg = SchemaRegistry()
+    reg.register("t", make_schema(31), config=SessionConfig(device_topk=True))
+    gw = Gateway(reg, GatewayConfig(batch_window_ms=0.0))
+    req = FCTRequest(keywords=KWS, r_max=3, top_k=5)
+    gw.query("t", req)
+    rng = np.random.default_rng(31)
+    ar = gw.append("t", "F",
+                   make_batch(rng, reg.session("t").schema, "F", 5,
+                              new_term=True))
+    assert gw.stats()["t"]["histograms_patched"] == 1
+    resp = gw.query("t", req)
+    assert resp.cache_hit and resp.data_epoch == ar.data_epoch
+    cold = FCTSession(reg.session("t").schema,
+                      config=SessionConfig(device_topk=True))
+    want = cold.query(req)
+    np.testing.assert_array_equal(resp.term_ids, want.term_ids)
+    np.testing.assert_array_equal(resp.freqs, want.freqs)
+    cold.close()
+    gw.close()
+
+
+def test_gateway_append_unknown_names():
+    gw, reg = _gateway("patch")
+    with pytest.raises(KeyError):
+        gw.append("nope", "F", [])
+    with pytest.raises(KeyError, match="unknown relation"):
+        gw.append("t", "NOPE", [{"text": [1, 2, 3, 4]}])
+    gw.close()
+
+
+# -- epoch fences: concurrent queries see one snapshot, never a mix -----------
+
+def test_concurrent_queries_see_consistent_epochs():
+    """Threads hammer the gateway while appends land: every response's
+    ``data_epoch`` names a snapshot, and its histogram must equal that
+    snapshot's cold recompute bit-exactly (pre- OR post-append, never a
+    torn mix of chunks and tuple sets)."""
+    gw, reg = _gateway("patch")
+    req = FCTRequest(keywords=KWS, r_max=3)
+    sess = reg.session("t")
+    snapshots = {0: sess.schema}
+    responses, errors = [], []
+    stop = threading.Event()
+
+    def worker():
+        try:
+            while not stop.is_set():
+                responses.append(gw.query("t", req))
+        except BaseException as exc:               # pragma: no cover
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    rng = np.random.default_rng(41)
+    try:
+        for _ in range(5):
+            time.sleep(0.02)              # let queries interleave
+            ar = gw.append("t", "F",
+                           make_batch(rng, sess.schema, "F", 3,
+                                      new_term=True))
+            snapshots[ar.data_epoch] = sess.schema
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    assert not errors
+    assert len(snapshots) == 6
+    expected = {ep: cold_freqs(schema, req)
+                for ep, schema in snapshots.items()}
+    assert len(responses) > 0
+    for resp in responses:
+        assert resp.data_epoch in expected
+        np.testing.assert_array_equal(resp.all_freqs,
+                                      expected[resp.data_epoch])
+    gw.close()
+
+
+def test_int32_patch_overflow_raises_cold_paths_error():
+    """A patch that would wrap int32 raises the EXACT OverflowError a cold
+    re-query under the int32-checked policy raises — entries are dropped,
+    never served wrapped.  Forces x64 OFF so the auto policy resolves to
+    int32-checked even under the CI x64 job (where totals would be exact
+    and nothing could wrap)."""
+    import jax
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", False)
+    try:
+        _int32_patch_overflow_body()
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+
+def _int32_patch_overflow_body():
+    try:
+        INT32_CHECKED.check_totals(np.array([-1]))
+    except OverflowError as exc:
+        cold_message = str(exc)
+    gw, reg = _gateway("patch")
+    req = FCTRequest(keywords=KWS, r_max=3)
+    resp = gw.query("t", req)
+    assert resp.accum_policy == "int32-checked"
+    # plant a memoized master whose totals sit at the int32 ceiling: the
+    # next append's positive delta must push it over
+    lane = gw._lane("t")
+    (key, (exp, master)), = list(lane.results._entries.items())
+    huge = master.all_freqs.astype(np.int64).copy()
+    huge[KWS[0]] = 2**31 - 1
+    import dataclasses
+    lane.results.put(key, dataclasses.replace(master, all_freqs=huge),
+                     generation=lane.results.generation)
+    rng = np.random.default_rng(43)
+    batch = make_batch(rng, reg.session("t").schema, "F", 1, plant=())
+    # both keywords: the fact-only CN (map-only) counts this row's own
+    # tokens unconditionally, so delta[KWS[0]] >= 1 regardless of joins
+    batch[0]["text"][0] = KWS[0]
+    batch[0]["text"][1] = KWS[1]
+    with pytest.raises(OverflowError) as ei:
+        gw.append("t", "F", batch)
+    assert str(ei.value) == cold_message
+    # the poisoned entry was dropped, not served: next hit is a fresh,
+    # correct recompute over the appended data
+    resp = gw.query("t", req)
+    assert not resp.cache_hit
+    np.testing.assert_array_equal(resp.all_freqs,
+                                  cold_freqs(reg.session("t").schema, req))
+    gw.close()
+
+
+def test_delta_freq_requires_matching_epoch():
+    sess = FCTSession(make_schema(51))
+    rng = np.random.default_rng(51)
+    ar1 = sess.append("F", make_batch(rng, sess.schema, "F", 2))
+    sess.append("F", make_batch(rng, sess.schema, "F", 2))
+    with pytest.raises(RuntimeError, match="serialize appends"):
+        sess.delta_freq(ar1, KWS, 3)
+
+
+# -- multi-device + int64 policy (subprocess: XLA_FLAGS precedes jax) ---------
+
+SCRIPT = textwrap.dedent("""
+    import os, sys
+    n_dev, x64 = int(sys.argv[1]), sys.argv[2] == "1"
+    os.environ["XLA_FLAGS"] = \\
+        f"--xla_force_host_platform_device_count={n_dev}"
+    if x64:
+        os.environ["JAX_ENABLE_X64"] = "1"
+    import warnings; warnings.filterwarnings("ignore")
+    import hashlib, json
+    import numpy as np
+    import jax
+    sys.path.insert(0, "tests")
+    from test_ingest import KWS, make_batch, make_schema
+    from repro.api import FCTRequest, FCTSession, SessionConfig
+
+    assert len(jax.devices()) == n_dev
+    rng = np.random.default_rng(7)
+    sess = FCTSession(make_schema(7, m=2, fact_rows=40))
+    req = FCTRequest(keywords=KWS, r_max=3, top_k=5)
+    freq = sess.query(req).all_freqs
+    for relation, n in (("F", 4), ("D0", 2), ("F", 0), ("D1", 3)):
+        ar = sess.append(relation,
+                         make_batch(rng, sess.schema, relation, n,
+                                    new_term=True))
+        if n:
+            freq = freq + sess.delta_freq(ar, KWS, req.r_max)
+    resp = sess.query(req)
+    cold = FCTSession(sess.schema)
+    want = cold.query(req)
+    np.testing.assert_array_equal(resp.all_freqs, want.all_freqs)
+    np.testing.assert_array_equal(freq, want.all_freqs)
+    out = {"freq": hashlib.sha256(np.ascontiguousarray(
+               resp.all_freqs).tobytes()).hexdigest(),
+           "accum": resp.accum_policy,
+           "epoch": resp.data_epoch}
+    print("RESULT" + json.dumps(out))
+""")
+
+
+def _run_subprocess(n_devices: int, x64: bool) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    env.pop("JAX_ENABLE_X64", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT, str(n_devices), "1" if x64 else "0"],
+        env=env, capture_output=True, text=True, timeout=600, cwd=_REPO)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT")][0]
+    return json.loads(line[len("RESULT"):])
+
+
+def test_append_equivalence_8_devices_and_policies():
+    """The in-subprocess asserts prove append == cold per config; the
+    cross-process hash comparison proves P=1 == P=8 and int32 == int64
+    produce the same histogram bits."""
+    runs = {(n, x64): _run_subprocess(n, x64)
+            for n in (1, 8) for x64 in (False, True)}
+    assert runs[(1, False)]["accum"] == "int32-checked"
+    assert runs[(1, True)]["accum"] == "int64-exact"
+    hashes = {r["freq"] for r in runs.values()}
+    assert len(hashes) == 1, runs
+    assert all(r["epoch"] == 3 for r in runs.values())   # 3 non-empty appends
